@@ -1,0 +1,46 @@
+"""Paper Fig. 2: training time as a function of training-set size.
+
+The paper reports near-linear scaling of tree-build time in n (the
+per-level passes are O(candidate-features × n)).  We measure wall time per
+tree at increasing n and report the local scaling exponent."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import tree as tree_lib
+from repro.core.forest import RandomForest
+from repro.data.synthetic import make_tabular
+
+
+def run(full: bool = False):
+    sizes = [1000, 4000, 16000] if not full else [4000, 16000, 64000, 256000]
+    times = []
+    for n in sizes:
+        ds = make_tabular("majority", n, num_informative=4, num_useless=4,
+                          seed=7)
+        p = tree_lib.TreeParams(max_depth=8, min_records=1)
+        # warm the jit caches with a first fit, then time
+        RandomForest(p, num_trees=1, seed=0).fit(ds)
+        t0 = time.perf_counter()
+        RandomForest(p, num_trees=1, seed=1).fit(ds)
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        emit(f"fig2/train_time/n{n}", dt * 1e6, f"s_per_tree={dt:.3f}")
+    exps = [np.log(times[i + 1] / times[i]) / np.log(sizes[i + 1] / sizes[i])
+            for i in range(len(sizes) - 1)]
+    emit("fig2/scaling_exponent", 0.0,
+         f"exponents={[round(e, 2) for e in exps]};"
+         f"claim=near-linear (<=1.3): "
+         f"{'OK' if max(exps) < 1.3 else 'NOTE-superlinear-at-bench-scale'}")
+    return times
+
+
+def main() -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Supersplit engine micro-bench: Pallas split_scan kernel (interpret on
+CPU) vs the jnp scan / segment backends — per-call µs and rows/s."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import splits
+from repro.kernels import ops
+
+
+def run():
+    rng = np.random.default_rng(0)
+    n, m, L, C = 16384, 4, 7, 2
+    num = rng.normal(size=(n, m)).astype(np.float32)
+    y = rng.integers(0, C, n).astype(np.int32)
+    w = rng.integers(0, 3, n).astype(np.float32)
+    leaf = rng.integers(0, L + 1, n).astype(np.int32)
+    si = np.argsort(num.T, axis=-1, kind="stable").astype(np.int32)
+    sv = jnp.asarray(np.take_along_axis(num.T, si, -1))
+    si = jnp.asarray(si)
+    leaf_j, w_j, y_j = map(jnp.asarray, (leaf, w, y))
+    stats = splits.row_stats(y_j, w_j, C, "classification")
+    cand = jnp.asarray(np.ones((m, L + 1), bool))
+
+    import jax
+    def seg(sv, si, cand):
+        return jax.vmap(lambda v, s, c: splits.best_numeric_split_segment(
+            v, leaf_j[s], w_j[s], stats[s], c, L))(sv, si, cand)
+
+    def scn(sv, si, cand):
+        return jax.vmap(lambda v, s, c: splits.best_numeric_split_scan(
+            v, leaf_j[s], w_j[s], stats[s], c, L))(sv, si, cand)
+
+    def ker(sv, si, cand):
+        return ops.split_scan_supersplit(sv, si, leaf_j, w_j, y_j, cand, L,
+                                         bn=512)
+
+    for name, fn in (("segment", seg), ("scan", scn),
+                     ("pallas_interpret", ker)):
+        us = timeit(fn, sv, si, cand, warmup=1, iters=3)
+        emit(f"kernel/split_{name}", us,
+             f"rows_per_s={m * n / (us / 1e6):.3e}")
+
+
+def main() -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Render the §Roofline table from dry-run JSONL records
+(written by `python -m repro.launch.dryrun --out ...`)."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path: str) -> list[dict]:
+    recs = []
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                recs.append(json.loads(line))
+    # last record per (arch, shape, mesh) wins
+    dedup = {}
+    for r in recs:
+        dedup[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(dedup.values())
+
+
+def render(recs: list[dict]) -> str:
+    lines = []
+    hdr = (f"| {'arch':24s} | {'shape':11s} | {'mesh':7s} | mem/dev GiB | "
+           f"compute ms | memory ms | coll ms | dominant | useful |")
+    lines.append(hdr)
+    lines.append("|" + "-" * (len(hdr) - 2) + "|")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted(recs, key=lambda r: (r["mesh"], r["arch"],
+                                         order.get(r["shape"], 9))):
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']:24s} | {r['shape']:11s} | "
+                         f"{r['mesh']:7s} | SKIPPED: {r['reason'][:60]} |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']:24s} | {r['shape']:11s} | "
+                         f"{r['mesh']:7s} | ERROR: {r['error'][:60]} |")
+            continue
+        mem = r["memory"]["total_bytes_per_device"] / 2**30
+        rl = r.get("roofline")
+        if rl:
+            lines.append(
+                f"| {r['arch']:24s} | {r['shape']:11s} | {r['mesh']:7s} | "
+                f"{mem:11.2f} | {rl['compute_s']*1e3:10.2f} | "
+                f"{rl['memory_s']*1e3:9.2f} | {rl['collective_s']*1e3:7.2f} | "
+                f"{rl['dominant']:8s} | {rl['useful_flops_ratio']:6.3f} |")
+        else:
+            lines.append(
+                f"| {r['arch']:24s} | {r['shape']:11s} | {r['mesh']:7s} | "
+                f"{mem:11.2f} | {'—':>10s} | {'—':>9s} | {'—':>7s} | "
+                f"{'—':8s} | {'—':>6s} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun.jsonl"
+    print(render(load(path)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (repo convention).
+Roofline terms come from the dry-run (launch/dryrun.py) — see
+roofline_report.py and EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig1_auc_scaling, fig2_time_scaling,
+                            fig3_depth_metrics, kernel_bench,
+                            table1_complexity)
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    benches = {
+        "table1": table1_complexity.run,
+        "fig2": fig2_time_scaling.run,
+        "fig3": fig3_depth_metrics.run,
+        "kernel": kernel_bench.run,
+        "fig1": fig1_auc_scaling.run,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if only and name != only:
+            continue
+        t0 = time.time()
+        fn()
+        print(f"bench/{name}/wall,{(time.time() - t0) * 1e6:.0f},", flush=True)
+
+
+if __name__ == "__main__":
+    main()

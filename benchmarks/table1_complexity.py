@@ -1,0 +1,65 @@
+"""Paper Table 1: complexity accounting for DRF vs Sliq/Sprint baselines.
+
+The DRF row is MEASURED from the instrumented tree builder (LevelStats):
+network bits (1-bit bitmap broadcasts + supersplit payloads), class-list
+bits (n·⌈log2(ℓ+1)⌉), and feature passes per level.  The Sliq/Sprint rows
+are the paper's analytic formulas evaluated at the same (n, m, D) so the
+asymptotic comparison in the paper is reproduced numerically."""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import tree as tree_lib
+from repro.core.forest import RandomForest
+from repro.data.synthetic import make_tabular
+
+
+def run():
+    n, m_inf, m_useless = 8000, 4, 4
+    m = m_inf + m_useless
+    ds = make_tabular("majority", n, m_inf, m_useless, seed=0)
+
+    for usb in (False, True):
+        rf = RandomForest(
+            tree_lib.TreeParams(max_depth=8, min_records=1, usb=usb),
+            num_trees=1, seed=0).fit(ds, collect_stats=True)
+        stats = rf.level_stats[0]
+        D = len(stats)
+        bitmap_bits = sum(s.network_bits_bitmap for s in stats)
+        ss_bits = sum(s.network_bits_supersplit for s in stats)
+        passes = sum(s.feature_passes for s in stats)
+        rows = sum(s.rows_scanned for s in stats)
+        cls_bits = max(s.class_list_bits for s in stats)
+        tag = "usb" if usb else "classic"
+        emit(f"table1/drf_{tag}/network_bitmap_bits", 0.0,
+             f"measured={bitmap_bits};paper_Dn={D * n}")
+        emit(f"table1/drf_{tag}/network_supersplit_bits", 0.0,
+             f"measured={ss_bits}")
+        emit(f"table1/drf_{tag}/class_list_bits", 0.0,
+             f"measured={cls_bits};paper_nlog2M={n * math.ceil(math.log2(max(s.open_leaves for s in stats) + 1))}")
+        emit(f"table1/drf_{tag}/feature_passes", 0.0,
+             f"measured={passes};rows_scanned={rows}")
+
+    # analytic baseline rows at the same scale (paper Table 1 formulas)
+    mp = math.isqrt(m)
+    Dd = 8
+    value_bits, idx_bits = 32, 64
+    emit("table1/analytic/sliq_read_bits", 0.0,
+         f"{(m + 1) * n * Dd * (value_bits + idx_bits)}  # (m''+1)nD([value]+[idx])")
+    emit("table1/analytic/sprint_network_bits", 0.0,
+         f"{n * idx_bits + Dd * n * idx_bits}  # n idx bagging + Dn idx broadcasts")
+    emit("table1/analytic/drf_network_bits", 0.0,
+         f"{Dd * n}  # Dn bits in D allreduce — 64x less than Sprint")
+    emit("table1/analytic/drf_memory_bits_per_sample", 0.0,
+         f"{1 + math.ceil(math.log2(256))}  # 1+log2(M) vs Sliq {value_bits + 16}")
+
+
+def main() -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""End-to-end serving driver: serve a small LM with batched requests
+(deliverable (b): "serve a small model with batched requests").
+
+Prefills each request, then decodes all active slots together every step —
+the same prefill/decode path the 32k/500k dry-runs lower for the pod.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_arch
+from repro.models import transformer
+from repro.serve import engine
+
+
+def main() -> None:
+    cfg = dataclasses.replace(get_arch("qwen3-0.6b").reduced(),
+                              num_layers=2, d_model=128, d_ff=256,
+                              vocab_size=512, head_dim=32)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    n_params = transformer.param_count(params)
+    print(f"serving {cfg.name}: {n_params/1e6:.2f}M params")
+
+    srv = engine.BatchedServer(cfg=cfg, params=params, max_seq=64, batch=4)
+
+    prompts = {
+        "req-A": [11, 45, 89, 200],
+        "req-B": [7, 3],
+        "req-C": [100, 101, 102, 103, 104],
+    }
+    slots = {}
+    for name, toks in prompts.items():
+        slots[name] = srv.add_request(toks)
+        print(f"{name}: prefilled {len(toks)} tokens -> slot {slots[name]}")
+
+    t0 = time.time()
+    steps = 12
+    for i in range(steps):
+        out = srv.step()
+        if i < 3:
+            print(f"step {i}: decoded {dict(sorted(out.items()))}")
+    dt = time.time() - t0
+    active = sum(1 for _ in prompts)
+    print(f"{steps} batched decode steps x {active} requests in {dt:.2f}s "
+          f"({steps*active/dt:.1f} tok/s on 1 CPU)")
+
+    for name, slot in slots.items():
+        toks = srv.finish(slot)
+        print(f"{name}: generated {toks}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""§Perf hillclimb driver: re-lower a (arch, shape) combo under different
+sharding/config overrides and print the roofline-term deltas.
+
+  PYTHONPATH=src python experiments/hillclimb.py dbrx-132b prefill_32k \
+      --override embed_fsdp=None --tag no-fsdp-gather
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import dryrun  # noqa: E402
+
+
+def parse_override(s: str):
+    k, v = s.split("=", 1)
+    if v == "None":
+        return k, None
+    if "," in v:
+        return k, tuple(v.split(","))
+    return k, v
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--override", action="append", default=[])
+    ap.add_argument("--tag", default="exp")
+    ap.add_argument("--no-accounting", action="store_true")
+    ap.add_argument("--out", default="experiments/hillclimb.jsonl")
+    args = ap.parse_args()
+
+    overrides = dict(parse_override(s) for s in args.override) or None
+    rec = dryrun.run_one(args.arch, args.shape, overrides=overrides,
+                         accounting=not args.no_accounting)
+    rec["tag"] = args.tag
+    rec["overrides"] = {k: list(v) if isinstance(v, tuple) else v
+                        for k, v in (overrides or {}).items()}
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    if rec["status"] == "ok" and "roofline" in rec:
+        r = rec["roofline"]
+        print(f"\n[{args.tag}] {args.arch} {args.shape}")
+        print(f"  mem/dev   : {rec['memory']['total_bytes_per_device']/2**30:.2f} GiB")
+        print(f"  compute   : {r['compute_s']*1e3:.2f} ms")
+        print(f"  memory    : {r['memory_s']*1e3:.2f} ms")
+        print(f"  collective: {r['collective_s']*1e3:.2f} ms  <- {r['dominant']} dominant")
+        print(f"  useful    : {r['useful_flops_ratio']:.3f}")
+        print(f"  colls     : {r['collective_counts']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Checkpointing: flat .npz of the state pytree + sharding-aware restore.
+
+Keys are "/"-joined pytree paths.  On restore, arrays are device_put with
+the current mesh's param specs so a checkpoint written on one topology can
+be loaded on another (single-host resharding; multi-host would use a
+tensorstore-backed writer, same key scheme).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, state) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(state))
+
+
+def restore(path: str, like, shardings: Optional[object] = None):
+    """Restore into the structure of `like` (a pytree of arrays/specs)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    flat_sh = (jax.tree_util.tree_leaves(shardings)
+               if shardings is not None else [None] * len(leaves))
+    for (path_k, leaf), sh in zip(leaves, flat_sh):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_k)
+        arr = jnp.asarray(data[key], dtype=leaf.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None else arr)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out)

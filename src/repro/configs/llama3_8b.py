@@ -1,0 +1,18 @@
+"""llama3-8b [dense] — GQA, 128k vocab.
+
+[arXiv:2407.21783] 32L, d_model 4096, 32 heads / 8 KV, d_ff 14336,
+vocab 128256, rope_theta 500000.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="llama3-8b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=128256,
+    rope_theta=5e5,
+))

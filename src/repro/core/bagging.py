@@ -1,0 +1,62 @@
+"""Deterministic seeded bagging (paper §2.2).
+
+"Instead of sending indices over the network, DRF uses a deterministic
+pseudorandom generator so that all workers agree on the set of bagged
+examples without network communication."
+
+We realize this with JAX's counter-based threefry PRNG: every device derives
+the identical per-sample bag count from (forest_seed, tree_index) — zero
+bytes on the wire, exactly the paper's property.
+
+Two modes:
+  * "poisson"     — independent Poisson(1) counts per sample (the standard
+                    distributed bootstrap; O(1/n) from multinomial, scales to
+                    row-sharded data with no communication).  Default.
+  * "multinomial" — exact n-out-of-n sampling with replacement (the paper's
+                    stated scheme); requires materializing n draws on one
+                    host, used in tests and small runs.
+  * "none"        — no bagging (weight 1 everywhere), for GBT.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("n", "mode"))
+def bag_counts(seed: jnp.ndarray, tree_idx, n: int, mode: str = "poisson") -> jnp.ndarray:
+    """Per-sample bag multiplicity for one tree. Returns (n,) float32."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0 else seed,
+                             tree_idx)
+    if mode == "poisson":
+        return jax.random.poisson(key, 1.0, (n,)).astype(jnp.float32)
+    if mode == "multinomial":
+        draws = jax.random.randint(key, (n,), 0, n)
+        return jnp.zeros((n,), jnp.float32).at[draws].add(1.0)
+    if mode == "none":
+        return jnp.ones((n,), jnp.float32)
+    raise ValueError(f"unknown bagging mode {mode!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("num_leaves", "m", "m_prime", "usb"))
+def candidate_features(
+    key: jnp.ndarray, depth, num_leaves: int, m: int, m_prime: int, usb: bool = False
+) -> jnp.ndarray:
+    """Per-leaf candidate feature mask (paper §2.4 attribute sampling; §3.2 USB).
+
+    Returns (num_leaves, m) bool — True where feature j is a candidate for
+    leaf h.  With `usb=True` (Unique Set of Bagged features per depth, z=1)
+    one draw is shared by every leaf of the depth, the variant the paper's
+    complexity analysis §3.2 shows is critical for distributed cost.
+    """
+    key = jax.random.fold_in(key, depth)
+    z = 1 if usb else num_leaves
+    # Draw m' features without replacement per subset via uniform top-k.
+    g = jax.random.uniform(key, (z, m))
+    _, idx = jax.lax.top_k(g, m_prime)
+    mask = jnp.zeros((z, m), bool).at[jnp.arange(z)[:, None], idx].set(True)
+    if usb:
+        mask = jnp.broadcast_to(mask, (num_leaves, m))
+    return mask

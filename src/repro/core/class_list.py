@@ -1,0 +1,60 @@
+"""Bit-packed sample→leaf mapping (paper §2.3).
+
+"DRF monitors the number ℓ of active leaves ... ⌈log2(ℓ+1)⌉ bits of
+information are needed to index a leaf [plus the closed-leaf sentinel].
+Therefore this mapping requires n⌈log2(ℓ+1)⌉ bits of memory."
+
+We honor the paper's memory bound with a packed uint32 representation:
+`values_per_word = 32 // bits` leaf ids per word (no word-straddling, which
+keeps pack/unpack fully vectorized on TPU lanes; the padding waste is at
+most bits-1 < 6 bits per word for realistic ℓ).
+
+Sentinel: leaf id 0 is reserved for "in a closed leaf"; open leaves are
+1..ℓ.  The unpacked working copy used inside the supersplit kernels is a
+plain int32 array — packing is for storage/transport, exactly the role the
+class list plays in the paper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+CLOSED = 0  # sentinel leaf id
+
+
+def bits_needed(num_open_leaves: int) -> int:
+    """⌈log2(ℓ+1)⌉, minimum 1."""
+    return max(1, int(jnp.ceil(jnp.log2(num_open_leaves + 1))))
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def pack(leaf_ids: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack (n,) int32 leaf ids (< 2**bits) into uint32 words."""
+    vpw = 32 // bits
+    n = leaf_ids.shape[0]
+    pad = (-n) % vpw
+    ids = jnp.pad(leaf_ids.astype(jnp.uint32), (0, pad)).reshape(-1, vpw)
+    shifts = (jnp.arange(vpw, dtype=jnp.uint32) * bits)[None, :]
+    return jnp.bitwise_or.reduce(ids << shifts, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "n"))
+def unpack(words: jnp.ndarray, bits: int, n: int) -> jnp.ndarray:
+    """Inverse of `pack`; returns (n,) int32."""
+    vpw = 32 // bits
+    shifts = (jnp.arange(vpw, dtype=jnp.uint32) * bits)[None, :]
+    mask = jnp.uint32((1 << bits) - 1)
+    vals = (words[:, None] >> shifts) & mask
+    return vals.reshape(-1)[:n].astype(jnp.int32)
+
+
+def packed_words(n: int, bits: int) -> int:
+    vpw = 32 // bits
+    return -(-n // vpw)
+
+
+def storage_bits(n: int, num_open_leaves: int) -> int:
+    """The paper's memory bound for the mapping (reported in benchmarks)."""
+    return n * bits_needed(num_open_leaves)

@@ -1,0 +1,200 @@
+"""DRF distribution on the TPU mesh (paper §2 worker topology → shard_map).
+
+Topology mapping (DESIGN.md §2):
+
+  * "model" axis  = the splitters: feature columns are sharded over it, each
+    device searching optimal splits only on its own columns (paper: "each
+    worker is assigned to a subset of columns ... read sequentially").
+  * "data" axis   = row range-partitions of the PRESORTED order (beyond-paper
+    2-D extension): shard r of a column holds sorted rows [r·n/w, (r+1)·n/w).
+    Exactness is preserved by resuming each shard's pass from the previous
+    shard's histogram/value state — an all_gather of (ℓ+1)·S floats per leaf
+    histogram, tiny compared to the data.
+  * partial supersplit merge = the gains all_gather (the paper's tree builder
+    "comparing the answers of the splitters").
+  * condition evaluation    = 1 bit per sample, psum over "model" (only the
+    winning column's owner contributes) — the paper's "Dn bits in D
+    allreduce" per tree.
+
+All functions here are shard_map'd and composable under jit, so the SAME
+code lowers for the 16×16 single-pod and (2,16,16) multi-pod production
+meshes in launch/dryrun.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+try:  # jax>=0.6 stable name, fall back to experimental
+    from jax import shard_map as _shard_map_mod
+    shard_map = _shard_map_mod.shard_map if hasattr(_shard_map_mod, "shard_map") else _shard_map_mod
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
+from repro.core import splits
+
+
+def _shmap(f, mesh, in_specs, out_specs):
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_vma=False)
+
+
+# ---------------------------------------------------------------------------
+# Column-sharded supersplit (the paper's splitter layout, Sliq/R style)
+# ---------------------------------------------------------------------------
+
+def make_column_sharded_supersplit(mesh, feature_axis: str = "model"):
+    """supersplit_fn for tree.build_tree: columns sharded over `feature_axis`.
+
+    Row state (class list, bag weights, stats) is replicated — exactly the
+    paper's splitter memory layout ("Sliq/R and DRF duplicate the class list
+    in each worker").
+    """
+    def fn(sorted_vals, sorted_idx, leaf_of, w, stats, cand, Lp,
+           impurity, task, min_records):
+        backend = splits.best_numeric_split_segment
+
+        def local(sv, si, cl, leaf_of, w, stats):
+            def per_col(v, s, c):
+                lf, ww, st = leaf_of[s], w[s], stats[s]
+                return backend(v, lf, ww, st, c, Lp, impurity, task, min_records)
+            return jax.vmap(per_col)(sv, si, cl)
+
+        sharded = _shmap(
+            local, mesh,
+            in_specs=(P(feature_axis, None), P(feature_axis, None),
+                      P(feature_axis, None), P(None), P(None), P(None, None)),
+            out_specs=(P(feature_axis, None), P(feature_axis, None)))
+        return sharded(sorted_vals, sorted_idx, cand, leaf_of, w, stats)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# 2-D sharded supersplit: columns over "model", presorted rows over "data"
+# ---------------------------------------------------------------------------
+
+def make_2d_sharded_supersplit(mesh, feature_axis: str = "model",
+                               row_axis: str = "data",
+                               backend: str = "segment"):
+    """Exact supersplit with BOTH axes sharded (beyond-paper extension).
+
+    Per column: each row shard computes (a) its local per-leaf stat totals
+    and last in-bag value, (b) all_gathers them over `row_axis` (payload
+    (L+1)·S floats — independent of n), (c) forms the exclusive shard prefix
+    (h_init, v_init) and GLOBAL totals, and (d) runs the exact backend on its
+    local slice resuming from that state.  Partial bests are merged with a
+    lexicographic (gain, -shard) max so tie-breaking matches the sequential
+    scan order.
+    """
+    fn_backend = splits.NUMERIC_BACKENDS[backend]
+
+    def make(Lp, impurity, task, min_records):
+        def local(sv, si, leaf_of, w, stats, cl):
+            # sv/si: (m_local, n_local) slices of the presorted order.
+            def per_col(v, s, c):
+                lf, ww, st = leaf_of[s], w[s], stats[s]
+                inbag = (ww > 0) & (lf > 0)
+                contrib = jnp.where(inbag[:, None], st, 0.0)
+                loc_tot = jax.ops.segment_sum(contrib, lf, num_segments=Lp + 1)
+                loc_last = jax.ops.segment_max(
+                    jnp.where(inbag, v, -jnp.inf), lf, num_segments=Lp + 1)
+                all_tot = jax.lax.all_gather(loc_tot, row_axis)      # (W, L+1, S)
+                all_last = jax.lax.all_gather(loc_last, row_axis)    # (W, L+1)
+                r = jax.lax.axis_index(row_axis)
+                W = all_tot.shape[0]
+                before = (jnp.arange(W) < r)[:, None, None]
+                h_init = jnp.sum(jnp.where(before, all_tot, 0.0), axis=0)
+                totals = jnp.sum(all_tot, axis=0)
+                v_init = jnp.max(jnp.where(before[..., 0], all_last, -jnp.inf), axis=0)
+                v_init = jnp.where(jnp.isfinite(v_init), v_init, jnp.inf)  # "none" sentinel
+                g, t = fn_backend(v, lf, ww, st, c, Lp, impurity, task,
+                                  min_records, h_init=h_init, v_init=v_init,
+                                  totals=totals)
+                # merge over row shards: max gain, ties -> earliest shard
+                key = jnp.where(jnp.isfinite(g), g, -jnp.inf)
+                allg = jax.lax.all_gather(key, row_axis)             # (W, L+1)
+                allt = jax.lax.all_gather(t, row_axis)
+                win = jnp.argmax(allg, axis=0)  # first max = earliest shard (scan order)
+                gsel = jnp.take_along_axis(allg, win[None], 0)[0]
+                tsel = jnp.take_along_axis(allt, win[None], 0)[0]
+                return gsel, tsel
+
+            return jax.vmap(per_col)(sv, si, cl)
+
+        return local
+
+    def fn(sorted_vals, sorted_idx, leaf_of, w, stats, cand, Lp,
+           impurity, task, min_records):
+        local = make(Lp, impurity, task, min_records)
+        sharded = _shmap(
+            local, mesh,
+            in_specs=(P(feature_axis, row_axis), P(feature_axis, row_axis),
+                      P(None), P(None), P(None, None), P(feature_axis, None)),
+            out_specs=(P(feature_axis, None), P(feature_axis, None)))
+        return sharded(sorted_vals, sorted_idx, leaf_of, w, stats, cand)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# 1-bit condition broadcast (Alg. 2 steps 5/7) under the mesh
+# ---------------------------------------------------------------------------
+
+def make_sharded_evaluate(mesh, feature_axis: str = "model"):
+    """Winning-condition evaluation: the owner of the winning column computes
+    the bit; a psum over the splitter axis broadcasts it (n bits per level —
+    the paper's Table 1 network row for DRF)."""
+
+    def fn(num_cols, leaf_of, feat_of_leaf, thr_of_leaf, m_num):
+        # num_cols: (m_num, n) raw columns sharded over feature_axis.
+        def local(cols, leaf_of, feat_of_leaf, thr_of_leaf):
+            k = jax.lax.axis_index(feature_axis)
+            mloc = cols.shape[0]
+            lo = k * mloc
+            f = feat_of_leaf[leaf_of]                       # global feature id
+            mine = (f >= lo) & (f < lo + mloc)
+            jloc = jnp.clip(f - lo, 0, mloc - 1)
+            x = cols[jloc, jnp.arange(cols.shape[1])]
+            bit = mine & (x <= thr_of_leaf[leaf_of])
+            return jax.lax.psum(bit.astype(jnp.uint8), feature_axis)
+
+        sharded = _shmap(
+            local, mesh,
+            in_specs=(P(feature_axis, None), P(None), P(None), P(None)),
+            out_specs=P(None))
+        return sharded(num_cols, leaf_of, feat_of_leaf, thr_of_leaf) > 0
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# One DRF level as a single jittable step (the dry-run / roofline workload)
+# ---------------------------------------------------------------------------
+
+def drf_level_step_fn(mesh, *, num_leaves: int, num_classes: int,
+                      impurity: str = "gini", backend: str = "segment",
+                      feature_axis: str = "model", row_axis: str = "data"):
+    """Build the jittable 'one depth level of DRF' step used by launch/dryrun.
+
+    Inputs (see launch/specs): sorted_vals/sorted_idx (m, n) sharded
+    (feature_axis, row_axis); leaf_of (n,), labels (n,), w (n,) sharded
+    (row_axis,).  Output: per-(feature, leaf) best gains/thresholds plus the
+    winning per-leaf split — i.e. Alg. 2 step 3 for one level, end to end.
+    """
+    sup = make_2d_sharded_supersplit(mesh, feature_axis, row_axis, backend)
+
+    def step(sorted_vals, sorted_idx, leaf_of, labels, w, cand):
+        stats = splits.row_stats(labels, w, num_classes, "classification")
+        gains, thr = sup(sorted_vals, sorted_idx, leaf_of, w, stats, cand,
+                         num_leaves, impurity, "classification", 1.0)
+        best_feat = jnp.argmax(gains, axis=0)               # (L+1,)
+        best_gain = jnp.max(gains, axis=0)
+        best_thr = jnp.take_along_axis(thr, best_feat[None], 0)[0]
+        return best_feat.astype(jnp.int32), best_gain, best_thr
+
+    return step

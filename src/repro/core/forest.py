@@ -1,0 +1,122 @@
+"""Random Forest manager (paper §2.5).
+
+"To train a Random Forest, the manager queries in parallel the tree
+builders.  This query contains the index of the requested tree (the tree
+index is used in the seeding, §2.2) as well as a list of splitters ..."
+
+The manager here is the host loop: each tree is trained by `tree.build_tree`
+(the tree-builder) against the shared presorted dataset (the splitters'
+columns).  Trees are independent — on a real cluster DRF trains them in
+parallel on replicated splitters; we expose `predict`, OOB scoring and
+distributed feature importance on top.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bagging, presort, tree as tree_lib
+from repro.core.dataset import TabularDataset
+
+
+@dataclasses.dataclass
+class RandomForest:
+    params: tree_lib.TreeParams
+    num_trees: int = 10
+    seed: int = 0
+
+    trees: list = dataclasses.field(default_factory=list)
+    level_stats: list = dataclasses.field(default_factory=list)
+    num_classes: int = 2
+    m: int = 0
+    m_num: int = 0
+
+    # ------------------------------------------------------------------
+    def fit(self, ds: TabularDataset, collect_stats: bool = False,
+            supersplit_fn=None) -> "RandomForest":
+        ds.validate()
+        self.num_classes = ds.num_classes
+        self.m, self.m_num = ds.m, ds.m_num
+        # §2.1 dataset preparation: presort once, reuse for every tree.
+        if ds.m_num:
+            sorted_idx = presort.presort_columns(ds.num)
+            sorted_vals = presort.gather_sorted(ds.num, sorted_idx)
+        else:
+            sorted_idx = jnp.zeros((0, ds.n), jnp.int32)
+            sorted_vals = jnp.zeros((0, ds.n), jnp.float32)
+        self.trees, self.level_stats = [], []
+        for t in range(self.num_trees):
+            tr, stats = tree_lib.build_tree(
+                num=ds.num, cat=ds.cat, labels=ds.labels,
+                sorted_vals=sorted_vals, sorted_idx=sorted_idx,
+                arities=ds.arities, num_classes=ds.num_classes,
+                params=self.params, seed=self.seed, tree_idx=t,
+                collect_stats=collect_stats, supersplit_fn=supersplit_fn)
+            self.trees.append(tr)
+            self.level_stats.append(stats)
+        return self
+
+    # ------------------------------------------------------------------
+    def predict_proba(self, num, cat, up_to: Optional[int] = None) -> jnp.ndarray:
+        assert self.trees, "fit first"
+        acc = None
+        for tr in self.trees[:up_to]:
+            p = tr.predict_raw(jnp.asarray(num, jnp.float32), jnp.asarray(cat, jnp.int32))
+            acc = p if acc is None else acc + p
+        return acc / len(self.trees[:up_to])
+
+    def predict(self, num, cat) -> jnp.ndarray:
+        p = self.predict_proba(num, cat)
+        if self.params.task == "classification":
+            return jnp.argmax(p, axis=-1)
+        return p[:, 0]
+
+    # ------------------------------------------------------------------
+    def oob_score(self, ds: TabularDataset) -> float:
+        """Out-of-bag accuracy using the seeded bagging (zero extra state)."""
+        n = ds.n
+        correct = np.zeros(n)
+        counted = np.zeros(n)
+        for t, tr in enumerate(self.trees):
+            w = np.asarray(bagging.bag_counts(self.seed, t, n, self.params.bagging))
+            oob = w == 0
+            if not oob.any():
+                continue
+            p = np.asarray(tr.predict_raw(ds.num, ds.cat))
+            pred = p.argmax(-1)
+            correct[oob] += pred[oob] == np.asarray(ds.labels)[oob]
+            counted[oob] += 1
+        mask = counted > 0
+        return float((correct[mask] / counted[mask]).mean()) if mask.any() else float("nan")
+
+    # ------------------------------------------------------------------
+    def feature_importances(self) -> np.ndarray:
+        """Mean decrease in impurity, computed per-splitter then merged —
+        the paper's "distributed computing of feature importance"."""
+        from repro.core import importance
+        return importance.mdi_importance(self.trees, self.m)
+
+    def auc(self, ds: TabularDataset) -> float:
+        """Binary AUC (the paper's headline metric on Leo / Fig. 1)."""
+        assert self.num_classes == 2
+        scores = np.asarray(self.predict_proba(ds.num, ds.cat))[:, 1]
+        y = np.asarray(ds.labels)
+        order = np.argsort(scores, kind="stable")
+        ranks = np.empty_like(order, dtype=np.float64)
+        ranks[order] = np.arange(1, len(y) + 1)
+        # average ranks over ties
+        s_sorted = scores[order]
+        uniq, inv, cnts = np.unique(s_sorted, return_inverse=True, return_counts=True)
+        start = np.concatenate([[0], np.cumsum(cnts)[:-1]])
+        avg = start + (cnts + 1) / 2.0
+        ranks[order] = avg[inv]
+        n1 = (y == 1).sum()
+        n0 = (y == 0).sum()
+        if n1 == 0 or n0 == 0:
+            return float("nan")
+        u = ranks[y == 1].sum() - n1 * (n1 + 1) / 2.0
+        return float(u / (n1 * n0))

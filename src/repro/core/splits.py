@@ -1,0 +1,285 @@
+"""Supersplit search (paper §2.4, Alg. 1).
+
+A *supersplit* is the set of best splits for every open leaf at the current
+depth, computed in ONE pass per candidate feature over the presorted data.
+
+Unified statistics
+------------------
+Split scoring works on per-leaf "stats" accumulators so the same engines
+serve Random Forests (classification) and Gradient Boosted Trees
+(regression, paper §1 "can be applied to other DF models, notably GBT"):
+
+  * classification: stats[k] = bag_weight * one_hot(label, C)        (S = C)
+  * regression:     stats[k] = bag_weight * [1, y, y^2]              (S = 3)
+
+`weighted_impurity(H)` returns N·impurity so that
+gain = imp(parent) − imp(left) − imp(right) is additive.
+
+Two exact numerical backends (identical results, different machines):
+
+  * `scan`    — the faithful Alg. 1: a sequential pass carrying one histogram
+                per open leaf (H ∈ (ℓ+1, S)) plus the last-seen value v_h.
+                This is the reference semantics and the shape the Pallas
+                kernel (`repro.kernels.split_scan`) implements on TPU.
+  * `segment` — beyond-paper TPU-native backend: a stable counting-sort of
+                the presorted order by leaf id makes every leaf contiguous;
+                per-leaf cumulative histograms then become segmented cumsums
+                — fully parallel across rows (no sequential carry), which is
+                what the VPU wants.  Bitwise-equal split choices up to
+                floating-point summation order.
+
+Leaf id convention: 0 = closed (sentinel, paper §2.3), open leaves 1..ℓ.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+NEG = jnp.float32(-jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# Stats & impurities
+# ---------------------------------------------------------------------------
+
+def row_stats(labels: jnp.ndarray, weights: jnp.ndarray, num_classes: int,
+              task: str) -> jnp.ndarray:
+    """Per-row stats contributions, (n, S)."""
+    if task == "classification":
+        return jax.nn.one_hot(labels, num_classes, dtype=jnp.float32) * weights[:, None]
+    y = labels.astype(jnp.float32)
+    return jnp.stack([weights, weights * y, weights * y * y], axis=-1)
+
+
+def count_fn(task: str) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    if task == "classification":
+        return lambda h: h.sum(-1)
+    return lambda h: h[..., 0]
+
+
+def weighted_impurity(h: jnp.ndarray, impurity: str) -> jnp.ndarray:
+    """N * impurity for a stats accumulator h (..., S). Safe at N=0."""
+    if impurity == "gini":
+        n = h.sum(-1)
+        return n - jnp.where(n > 0, (h * h).sum(-1) / jnp.maximum(n, 1e-12), 0.0)
+    if impurity == "entropy":
+        n = h.sum(-1, keepdims=True)
+        p = h / jnp.maximum(n, 1e-12)
+        plogp = jnp.where(h > 0, p * jnp.log(jnp.maximum(p, 1e-12)), 0.0)
+        return -(n[..., 0] * plogp.sum(-1))
+    if impurity == "variance":
+        w, wy, wy2 = h[..., 0], h[..., 1], h[..., 2]
+        return jnp.maximum(wy2 - jnp.where(w > 0, wy * wy / jnp.maximum(w, 1e-12), 0.0), 0.0)
+    raise ValueError(f"unknown impurity {impurity!r}")
+
+
+def split_gain(left: jnp.ndarray, right: jnp.ndarray, impurity: str) -> jnp.ndarray:
+    parent = left + right
+    return (weighted_impurity(parent, impurity)
+            - weighted_impurity(left, impurity)
+            - weighted_impurity(right, impurity))
+
+
+# ---------------------------------------------------------------------------
+# Numerical — faithful Alg. 1 scan backend
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("num_leaves", "impurity", "task"))
+def best_numeric_split_scan(
+    vals_sorted: jnp.ndarray,    # (n,) float32, ascending
+    leaf_sorted: jnp.ndarray,    # (n,) int32 in [0, L], 0 = closed
+    w_sorted: jnp.ndarray,       # (n,) float32 bag weights
+    stats_sorted: jnp.ndarray,   # (n, S) float32 row stats
+    cand_leaf: jnp.ndarray,      # (L+1,) bool — feature is candidate for leaf
+    num_leaves: int,             # L (static)
+    impurity: str = "gini",
+    task: str = "classification",
+    min_records: float = 1.0,
+    h_init: jnp.ndarray | None = None,   # (L+1, S) prefix from earlier row shards
+    v_init: jnp.ndarray | None = None,   # (L+1,)  last in-bag value in earlier shards
+    totals: jnp.ndarray | None = None,   # (L+1, S) GLOBAL per-leaf totals
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Alg. 1 verbatim: one streaming pass, H ∈ (L+1, S) carried.
+
+    The optional h_init/v_init/totals let a row shard resume the scan exactly
+    where the previous (presorted-order) shard left off — the 2-D sharding
+    extension (DESIGN.md §2).  Returns (best_gain, best_threshold), each
+    (L+1,); entry 0 (closed) unused.
+    """
+    L1, s_dim = num_leaves + 1, stats_sorted.shape[-1]
+    if totals is None:
+        totals = jax.ops.segment_sum(
+            jnp.where((w_sorted > 0)[:, None], stats_sorted, 0.0),
+            leaf_sorted, num_segments=L1)
+    cnt = count_fn(task)
+
+    def step(carry, xs):
+        H, v, best_s, best_t = carry
+        a, h, w, srow = xs
+        active = (h > 0) & cand_leaf[h] & (w > 0)
+        Hh, vh = H[h], v[h]
+        tau = (a + vh) * 0.5
+        left, right = Hh, totals[h] - Hh
+        ok = active & (a > vh) & jnp.isfinite(vh) \
+            & (cnt(left) >= min_records) & (cnt(right) >= min_records)
+        g = jnp.where(ok, split_gain(left, right, impurity), NEG)
+        better = g > best_s[h]
+        best_s = best_s.at[h].set(jnp.where(better, g, best_s[h]))
+        best_t = best_t.at[h].set(jnp.where(better, tau, best_t[h]))
+        H = H.at[h].add(jnp.where(active, srow, 0.0))
+        v = v.at[h].set(jnp.where(active, a, vh))
+        return (H, v, best_s, best_t), None
+
+    init = (jnp.zeros((L1, s_dim), jnp.float32) if h_init is None else h_init,
+            jnp.full((L1,), jnp.inf, jnp.float32) if v_init is None else v_init,
+            jnp.full((L1,), NEG), jnp.zeros((L1,), jnp.float32))
+    # v init=+inf makes (a > v) False for the first in-bag row of each leaf,
+    # after which v tracks the last in-bag value — the paper's v_h.
+    (H, v, best_s, best_t), _ = jax.lax.scan(
+        step, init, (vals_sorted, leaf_sorted, w_sorted, stats_sorted))
+    del H, v
+    return best_s, best_t
+
+
+# ---------------------------------------------------------------------------
+# Numerical — sorted-segment backend (TPU-native, exact)
+# ---------------------------------------------------------------------------
+
+def _segmented_cummax_exclusive(x: jnp.ndarray, is_start: jnp.ndarray) -> jnp.ndarray:
+    """Exclusive running max within segments (reset at is_start)."""
+    def combine(a, b):
+        (va, ba), (vb, bb) = a, b
+        return jnp.where(bb, vb, jnp.maximum(va, vb)), ba | bb
+    inc, _ = jax.lax.associative_scan(combine, (x, is_start))
+    exc = jnp.concatenate([NEG[None], inc[:-1]])
+    return jnp.where(is_start, NEG, exc)
+
+
+@functools.partial(jax.jit, static_argnames=("num_leaves", "impurity", "task"))
+def best_numeric_split_segment(
+    vals_sorted: jnp.ndarray,
+    leaf_sorted: jnp.ndarray,
+    w_sorted: jnp.ndarray,
+    stats_sorted: jnp.ndarray,
+    cand_leaf: jnp.ndarray,
+    num_leaves: int,
+    impurity: str = "gini",
+    task: str = "classification",
+    min_records: float = 1.0,
+    h_init: jnp.ndarray | None = None,
+    v_init: jnp.ndarray | None = None,
+    totals: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact vectorized supersplit: counting-sort by leaf + segmented cumsum."""
+    L1 = num_leaves + 1
+    n = vals_sorted.shape[0]
+    cnt = count_fn(task)
+
+    order = jnp.argsort(leaf_sorted, stable=True)          # leaves contiguous,
+    lf = leaf_sorted[order]                                 # value-sorted inside
+    a = vals_sorted[order]
+    w = w_sorted[order]
+    inbag = (w > 0) & (lf > 0)
+    contrib = jnp.where(inbag[:, None], stats_sorted[order], 0.0)
+
+    cum = jnp.cumsum(contrib, axis=0)
+    cum_excl = cum - contrib
+    is_start = jnp.concatenate([jnp.ones((1,), bool), lf[1:] != lf[:-1]])
+    start_idx = jax.lax.cummax(jnp.where(is_start, jnp.arange(n), -1))
+    left = cum_excl - cum_excl[start_idx]                   # per-leaf exclusive prefix
+    if h_init is not None:
+        left = left + h_init[lf]                            # earlier-shard prefix
+
+    if totals is None:
+        assert h_init is None, "row-sharded call must pass GLOBAL totals"
+        totals = jax.ops.segment_sum(contrib, lf, num_segments=L1)
+    right = totals[lf] - left
+
+    pv = _segmented_cummax_exclusive(jnp.where(inbag, a, NEG), is_start)
+    if v_init is not None:
+        vi = jnp.where(jnp.isfinite(v_init), v_init, NEG)
+        pv = jnp.maximum(pv, vi[lf])
+    ok = inbag & cand_leaf[lf] & (a > pv) & jnp.isfinite(pv) \
+        & (cnt(left) >= min_records) & (cnt(right) >= min_records)
+    gain = jnp.where(ok, split_gain(left, right, impurity), NEG)
+    tau = (a + pv) * 0.5
+
+    best_s = jax.ops.segment_max(gain, lf, num_segments=L1)
+    best_s = jnp.maximum(best_s, NEG)  # segment_max of empty segment -> -inf already
+    # first row achieving the max (scan-order tie-breaking)
+    hit = gain >= best_s[lf]
+    first = jax.ops.segment_min(jnp.where(hit, jnp.arange(n), n), lf, num_segments=L1)
+    best_t = jnp.where(first < n, tau[jnp.minimum(first, n - 1)], 0.0)
+    return best_s, best_t
+
+
+NUMERIC_BACKENDS = {
+    "scan": best_numeric_split_scan,
+    "segment": best_numeric_split_segment,
+}
+
+
+# ---------------------------------------------------------------------------
+# Categorical — count tables + Breiman ordering (paper §2.4, SM)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("num_leaves", "arity", "impurity", "task"))
+def best_categorical_split(
+    x_col: jnp.ndarray,          # (n,) int32 category values
+    leaf_of: jnp.ndarray,        # (n,) int32 in [0, L]
+    w: jnp.ndarray,              # (n,) float32
+    stats: jnp.ndarray,          # (n, S)
+    cand_leaf: jnp.ndarray,      # (L+1,) bool
+    num_leaves: int,
+    arity: int,
+    impurity: str = "gini",
+    task: str = "classification",
+    min_records: float = 1.0,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Best subset split x ∈ C per open leaf, one pass.
+
+    Builds the (leaf × category × stat) count table the paper describes for
+    categorical attributes, then orders categories per leaf by the Breiman
+    metric (P(last class | v) for classification — exact for binary
+    classification; mean(y|v) for regression — exact for L2) and scans the
+    ordered prefix cuts.
+
+    Returns (best_gain (L+1,), best_mask (L+1, arity) bool) — mask True means
+    the category goes to the LEFT child.
+    """
+    L1 = num_leaves + 1
+    inbag = (w > 0) & (leaf_of > 0)
+    contrib = jnp.where(inbag[:, None], stats, 0.0)
+    flat = leaf_of * arity + x_col
+    table = jax.ops.segment_sum(contrib, flat, num_segments=L1 * arity)
+    table = table.reshape(L1, arity, -1)                    # (L+1, V, S)
+    totals = table.sum(1)                                   # (L+1, S)
+    cnt = count_fn(task)
+
+    tc = cnt(table)                                         # (L+1, V) counts
+    if task == "classification":
+        metric = table[..., -1] / jnp.maximum(tc, 1e-12)
+    else:
+        metric = table[..., 1] / jnp.maximum(tc, 1e-12)
+    # Put empty categories last so cuts enumerate only populated prefixes.
+    metric = jnp.where(tc > 0, metric, jnp.inf)
+    order = jnp.argsort(metric, axis=1)                     # (L+1, V)
+    sorted_table = jnp.take_along_axis(table, order[..., None], axis=1)
+    prefix = jnp.cumsum(sorted_table, axis=1)               # inclusive: cut after pos v
+    left = prefix[:, :-1, :]                                # cuts 0..V-2
+    right = totals[:, None, :] - left
+    ok = (cnt(left) >= min_records) & (cnt(right) >= min_records) \
+        & cand_leaf[:, None]
+    gains = jnp.where(ok, split_gain(left, right, impurity), NEG)  # (L+1, V-1)
+
+    best_cut = jnp.argmax(gains, axis=1)                    # first max: argmax picks first
+    best_gain = jnp.take_along_axis(gains, best_cut[:, None], axis=1)[:, 0]
+    # mask in ordered space: positions <= cut; scatter back to category space
+    pos = jnp.arange(arity)[None, :]
+    in_left_sorted = pos <= best_cut[:, None]
+    mask = jnp.take_along_axis(
+        in_left_sorted, jnp.argsort(order, axis=1), axis=1)  # inverse perm
+    return best_gain, mask

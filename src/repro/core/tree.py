@@ -1,0 +1,422 @@
+"""Level-by-level decision tree builder (paper Alg. 2) + flat tree arrays.
+
+The *tree builder* is the control plane (host Python, like the paper's tree
+builder workers which "do not have access to the dataset"); the per-level
+supersplit search and condition evaluation are the data plane (jitted JAX,
+the paper's splitters).  All nodes of a depth are split together, so the
+whole dataset is scanned once per candidate feature per LEVEL — never per
+node — which is the paper's central complexity win over Sprint.
+
+Per-level network/disk accounting (paper Table 1) is recorded in
+`LevelStats` by the builder: one bit per sample per level broadcast
+("Dn bits in D allreduce"), the ⌈log2(ℓ+1)⌉·n class-list bits, and the
+number of sequential passes over the data.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bagging, class_list, splits
+
+
+# ---------------------------------------------------------------------------
+# Hyper-parameters & flat tree
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TreeParams:
+    max_depth: int = 20
+    min_records: float = 1.0        # paper: "minimum number of records in a leaf"
+    num_candidates: Optional[int] = None  # m' (None = ceil(sqrt(m)), the paper default)
+    impurity: str = "gini"          # gini | entropy | variance
+    task: str = "classification"
+    backend: str = "segment"        # segment | scan | kernel (Pallas)
+    usb: bool = False               # unique set of bagged features per depth (§3.2)
+    bagging: str = "poisson"        # poisson | multinomial | none
+    leaf_pad: int = 8               # pad open-leaf count to multiples (recompile bound)
+    # Sprint-style record pruning (paper §3): when the fraction of samples
+    # sitting in CLOSED leaves reaches this threshold, compact the dataset
+    # (drop those rows, filter the presorted order — no re-sort needed).
+    # 1.0 disables it, which is the paper's Leo configuration ("this
+    # operation is not triggered during the experimentation").
+    prune_closed_frac: float = 1.0
+
+
+@dataclasses.dataclass
+class Tree:
+    """Flat-array decision tree (numpy, host-side)."""
+    feature: np.ndarray        # (N,) int32; -1 = leaf
+    threshold: np.ndarray      # (N,) float32 (numeric nodes)
+    is_cat: np.ndarray         # (N,) bool
+    cat_mask: np.ndarray       # (N, max_arity) bool; True -> go LEFT
+    children: np.ndarray       # (N, 2) int32 [left, right]
+    value: np.ndarray          # (N, C) class distribution / (N, 1) mean
+    n_node: np.ndarray         # (N,) in-bag weight reaching the node
+    gain: np.ndarray           # (N,) split gain (0 for leaves)
+    depth: np.ndarray          # (N,) int32
+    m_num: int
+    task: str
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.feature)
+
+    @property
+    def num_leaves(self) -> int:
+        return int((self.feature < 0).sum())
+
+    @property
+    def max_depth_reached(self) -> int:
+        return int(self.depth.max()) if self.num_nodes else 0
+
+    def node_density(self) -> float:
+        """Paper §5: #leaves / 2^D for the deepest depth D."""
+        d = self.max_depth_reached
+        return self.num_leaves / float(2 ** d) if d else 1.0
+
+    def sample_density(self) -> float:
+        """Paper §5: fraction of in-bag weight reaching depth-D leaves."""
+        d = self.max_depth_reached
+        leaves = self.feature < 0
+        bottom = leaves & (self.depth == d)
+        tot = self.n_node[leaves].sum()
+        return float(self.n_node[bottom].sum() / tot) if tot > 0 else 0.0
+
+    def predict_raw(self, num: jnp.ndarray, cat: jnp.ndarray) -> jnp.ndarray:
+        """(B, C) distributions / (B, 1) means."""
+        return _predict_jit(
+            jnp.asarray(self.feature), jnp.asarray(self.threshold),
+            jnp.asarray(self.is_cat), jnp.asarray(self.cat_mask),
+            jnp.asarray(self.children), jnp.asarray(self.value),
+            num, cat, self.m_num, int(self.depth.max()) + 1)
+
+
+@dataclasses.dataclass
+class LevelStats:
+    """Per-level complexity counters (benchmarks/table1)."""
+    depth: int
+    open_leaves: int
+    network_bits_bitmap: int     # the 1-bit-per-sample broadcast
+    network_bits_supersplit: int # partial supersplit payloads (tiny)
+    class_list_bits: int         # n * ceil(log2(l+1))
+    feature_passes: int          # sequential passes over candidate columns
+    rows_scanned: int
+
+
+# ---------------------------------------------------------------------------
+# Jitted per-level pieces
+# ---------------------------------------------------------------------------
+
+def _pad_leaves(L: int, pad: int) -> int:
+    """Pad to a power of two (recompilation count is O(log leaves))."""
+    return max(pad, 1 << (L - 1).bit_length())
+
+
+@jax.jit
+def _gather_sorted_level(sorted_idx, leaf_of, w, stats):
+    """Per-column gathers of the level state in presorted order."""
+    return leaf_of[sorted_idx], w[sorted_idx], stats[sorted_idx]
+
+
+def _numeric_supersplits(backend, sorted_vals, sorted_idx, leaf_of, w, stats,
+                         cand, Lp, impurity, task, min_records):
+    """vmap the chosen exact backend over numerical columns.
+
+    sorted_vals/sorted_idx: (m_num, n); cand: (m_num, Lp+1).
+    Returns gains (m_num, Lp+1), thresholds (m_num, Lp+1).
+    """
+    fn = splits.NUMERIC_BACKENDS[backend]
+    def per_col(v, si, cl):
+        lf, ww, st = _gather_sorted_level(si, leaf_of, w, stats)
+        return fn(v, lf, ww, st, cl, Lp, impurity, task, min_records)
+    return jax.vmap(per_col)(sorted_vals, sorted_idx, cand)
+
+
+def _categorical_supersplits(cat_cols, leaf_of, w, stats, cand, Lp, max_arity,
+                             impurity, task, min_records):
+    """vmap exact categorical search over columns padded to max_arity."""
+    def per_col(x, cl):
+        return splits.best_categorical_split(
+            x, leaf_of, w, stats, cl, Lp, max_arity, impurity, task, min_records)
+    return jax.vmap(per_col)(cat_cols, cand)
+
+
+@functools.partial(jax.jit, static_argnames=("m_num",))
+def _evaluate_conditions(num, cat, leaf_of, feat_of_leaf, thr_of_leaf,
+                         iscat_of_leaf, mask_of_leaf, m_num):
+    """Alg. 2 step 5: evaluate the winning condition of each sample's leaf.
+
+    Returns bits (n,) bool — True = LEFT.  In the distributed engine this is
+    the 1-bit-per-sample payload that gets allreduced (see distributed.py).
+    """
+    f = feat_of_leaf[leaf_of]                                   # (n,)
+    jn = jnp.clip(f, 0, max(m_num - 1, 0))
+    jc = jnp.clip(f - m_num, 0, max(cat.shape[1] - 1, 0))
+    xnum = jnp.take_along_axis(num, jn[:, None], axis=1)[:, 0] if num.size else jnp.zeros_like(leaf_of, jnp.float32)
+    xcat = jnp.take_along_axis(cat, jc[:, None], axis=1)[:, 0] if cat.size else jnp.zeros_like(leaf_of)
+    num_bit = xnum <= thr_of_leaf[leaf_of]
+    cat_bit = mask_of_leaf[leaf_of, xcat]
+    return jnp.where(iscat_of_leaf[leaf_of], cat_bit, num_bit)
+
+
+@functools.partial(jax.jit, static_argnames=("Lp",))
+def _leaf_totals(leaf_of, stats, w, Lp):
+    inbag = (w > 0) & (leaf_of > 0)
+    return jax.ops.segment_sum(jnp.where(inbag[:, None], stats, 0.0),
+                               leaf_of, num_segments=Lp + 1)
+
+
+@jax.jit
+def _reassign(leaf_of, bits, new_left, new_right):
+    """Alg. 2 step 6: map samples to child leaf ids (0 if child closed)."""
+    child = jnp.where(bits, new_left[leaf_of], new_right[leaf_of])
+    return jnp.where(leaf_of > 0, child, 0)
+
+
+# ---------------------------------------------------------------------------
+# The tree builder (Alg. 2)
+# ---------------------------------------------------------------------------
+
+def build_tree(
+    *,
+    num: jnp.ndarray, cat: jnp.ndarray, labels: jnp.ndarray,
+    sorted_vals: jnp.ndarray, sorted_idx: jnp.ndarray,
+    arities: tuple[int, ...], num_classes: int,
+    params: TreeParams, seed: int, tree_idx: int,
+    collect_stats: bool = False,
+    supersplit_fn=None,
+) -> tuple[Tree, list[LevelStats]]:
+    """Train one tree, depth level by depth level.
+
+    `supersplit_fn`, when given, replaces the local numeric supersplit search
+    (used by distributed.py to run it under shard_map on the mesh).
+    """
+    n = int(labels.shape[0])
+    m_num = int(sorted_vals.shape[0]) if sorted_vals.size else 0
+    m_cat = len(arities)
+    m = m_num + m_cat
+    max_arity = max(arities) if arities else 1
+    task = params.task
+    m_prime = params.num_candidates or max(1, math.isqrt(m) + (0 if math.isqrt(m) ** 2 == m else 1))
+
+    w = bagging.bag_counts(seed, tree_idx, n, params.bagging)
+    stats = splits.row_stats(labels, w, num_classes, task)
+    s_dim = stats.shape[-1]
+    cnt = splits.count_fn(task)
+    fkey = jax.random.fold_in(jax.random.PRNGKey(seed ^ 0x5EED), tree_idx)
+
+    # node storage (host lists)
+    feature, threshold, is_cat_l, cat_mask_l = [], [], [], []
+    children, value, n_node, gain_l, depth_l = [], [], [], [], []
+
+    def new_node(depth):
+        feature.append(-1); threshold.append(0.0); is_cat_l.append(False)
+        cat_mask_l.append(None); children.append([-1, -1])
+        value.append(np.zeros(max(num_classes, 2) if task == "classification" else 1,
+                              np.float32))
+        n_node.append(0.0); gain_l.append(0.0); depth_l.append(depth)
+        return len(feature) - 1
+
+    root = new_node(0)
+    open_nodes = [root]                       # leaf id h (1-based) -> node id
+    leaf_of = jnp.ones((n,), jnp.int32)       # all samples at the root
+    stats_log: list[LevelStats] = []
+
+    for depth in range(params.max_depth + 1):
+        L = len(open_nodes)
+        if L == 0:
+            break
+        Lp = _pad_leaves(L, params.leaf_pad)
+
+        # leaf totals -> node values & forced closes
+        totals = np.asarray(_leaf_totals(leaf_of, stats, w, Lp))  # (Lp+1, S)
+        counts = np.asarray(cnt(jnp.asarray(totals)))
+        for h, node in enumerate(open_nodes, start=1):
+            n_node[node] = float(counts[h])
+            if task == "classification":
+                tot = max(counts[h], 1e-12)
+                value[node] = (totals[h] / tot).astype(np.float32)
+            else:
+                wsum = max(totals[h, 0], 1e-12)
+                value[node] = np.array([totals[h, 1] / wsum], np.float32)
+
+        at_max_depth = depth >= params.max_depth
+        splittable = np.array(
+            [counts[h] >= 2 * params.min_records and not at_max_depth
+             for h in range(1, L + 1)] + [False] * (Lp - L))
+        if not splittable.any():
+            break
+
+        # Alg. 2 step 3: query the splitters for the optimal supersplit
+        cand = bagging.candidate_features(fkey, depth, Lp, m, m_prime, params.usb)
+        cand = cand & jnp.asarray(splittable)[:, None]
+        cand_p = jnp.concatenate([jnp.zeros((1, m), bool), cand], 0)  # leaf 0 = closed
+
+        all_gains = np.full((m, Lp + 1), -np.inf, np.float32)
+        all_thr = np.zeros((m, Lp + 1), np.float32)
+        all_masks = None
+        if m_num:
+            if supersplit_fn is not None:
+                g, t = supersplit_fn(
+                    sorted_vals, sorted_idx, leaf_of, w, stats,
+                    cand_p[:, :m_num].T, Lp, params.impurity, task,
+                    params.min_records)
+            elif params.backend == "kernel":
+                from repro.kernels import ops as kops
+                g, t = kops.split_scan_supersplit(
+                    sorted_vals, sorted_idx, leaf_of, w, labels,
+                    cand_p[:, :m_num].T, Lp, params.impurity, task,
+                    params.min_records)
+            else:
+                g, t = _numeric_supersplits(
+                    params.backend, sorted_vals, sorted_idx, leaf_of, w, stats,
+                    cand_p[:, :m_num].T, Lp, params.impurity, task,
+                    params.min_records)
+            all_gains[:m_num], all_thr[:m_num] = np.asarray(g), np.asarray(t)
+        if m_cat:
+            g, masks = _categorical_supersplits(
+                cat.T, leaf_of, w, stats, cand_p[:, m_num:].T, Lp, max_arity,
+                params.impurity, task, params.min_records)
+            all_gains[m_num:] = np.asarray(g)
+            all_masks = np.asarray(masks)                    # (m_cat, Lp+1, V)
+
+        # tree builder merges partial supersplits (Alg. 2 step 3, final argmax)
+        best_feat = all_gains.argmax(axis=0)                 # (Lp+1,)
+        best_gain = all_gains[best_feat, np.arange(Lp + 1)]
+
+        # Alg. 2 step 8: close leaves with no good condition
+        feat_of_leaf = np.zeros(Lp + 1, np.int32)
+        thr_of_leaf = np.zeros(Lp + 1, np.float32)
+        iscat_of_leaf = np.zeros(Lp + 1, bool)
+        mask_of_leaf = np.zeros((Lp + 1, max_arity), bool)
+        new_left = np.zeros(Lp + 1, np.int32)
+        new_right = np.zeros(Lp + 1, np.int32)
+        next_open: list[int] = []
+        any_split = False
+        for h in range(1, L + 1):
+            node = open_nodes[h - 1]
+            if not splittable[h - 1] or not np.isfinite(best_gain[h]) or best_gain[h] <= 1e-9:
+                continue
+            j = int(best_feat[h])
+            any_split = True
+            feature[node] = j
+            gain_l[node] = float(best_gain[h])
+            feat_of_leaf[h] = j
+            if j < m_num:
+                threshold[node] = float(all_thr[j, h])
+                thr_of_leaf[h] = all_thr[j, h]
+            else:
+                is_cat_l[node] = True
+                iscat_of_leaf[h] = True
+                cm = all_masks[j - m_num, h]
+                cat_mask_l[node] = cm.copy()
+                mask_of_leaf[h] = cm
+            lc, rc = new_node(depth + 1), new_node(depth + 1)
+            children[node] = [lc, rc]
+            next_open.extend([lc, rc])
+            new_left[h] = len(next_open) - 1               # 1-based ids below
+            new_right[h] = len(next_open)
+
+        if collect_stats:
+            open_w = float(counts[1:L + 1].sum())
+            stats_log.append(LevelStats(
+                depth=depth, open_leaves=L,
+                network_bits_bitmap=int(open_w),
+                network_bits_supersplit=int(m * (Lp + 1) * 64),
+                class_list_bits=class_list.storage_bits(n, L),
+                feature_passes=int(min(m_prime * (1 if params.usb else L), m)),
+                rows_scanned=n * min(m_prime * (1 if params.usb else L), m)))
+
+        if not any_split:
+            break
+
+        # Alg. 2 steps 5-7: evaluate conditions (1 bit/sample) and reassign
+        bits = _evaluate_conditions(
+            num, cat, leaf_of, jnp.asarray(feat_of_leaf), jnp.asarray(thr_of_leaf),
+            jnp.asarray(iscat_of_leaf), jnp.asarray(mask_of_leaf), m_num)
+        leaf_of = _reassign(leaf_of, bits, jnp.asarray(new_left), jnp.asarray(new_right))
+        open_nodes = next_open
+
+        # Sprint-style pruning switch (paper §3): compact rows in closed
+        # leaves once they dominate.  The presorted order is FILTERED, not
+        # re-sorted (stability preserves it), so the one-time cost is one
+        # pass — the trade-off rule the paper describes.
+        if params.prune_closed_frac < 1.0 and n > 0:
+            lf_np = np.asarray(leaf_of)
+            keep = lf_np > 0
+            frac_closed = 1.0 - keep.mean()
+            if frac_closed >= params.prune_closed_frac and keep.any() \
+                    and keep.sum() < n:
+                remap = np.cumsum(keep) - 1
+                idx_np = np.asarray(sorted_idx)
+                vals_np = np.asarray(sorted_vals)
+                kept_cols = keep[idx_np]                      # (m_num, n)
+                n_new = int(keep.sum())
+                new_idx = np.empty((m_num, n_new), np.int32)
+                new_vals = np.empty((m_num, n_new), np.float32)
+                for j in range(m_num):
+                    sel = kept_cols[j]
+                    new_idx[j] = remap[idx_np[j][sel]]
+                    new_vals[j] = vals_np[j][sel]
+                sorted_idx = jnp.asarray(new_idx)
+                sorted_vals = jnp.asarray(new_vals)
+                num = num[jnp.asarray(keep)] if num.size else num
+                cat = cat[jnp.asarray(keep)] if cat.size else cat
+                stats = stats[jnp.asarray(keep)]
+                w = w[jnp.asarray(keep)]
+                labels = labels[jnp.asarray(keep)]
+                leaf_of = jnp.asarray(lf_np[keep])
+                n = n_new
+
+    N = len(feature)
+    cat_mask_arr = np.zeros((N, max_arity), bool)
+    for i, cm in enumerate(cat_mask_l):
+        if cm is not None:
+            cat_mask_arr[i, :len(cm)] = cm
+    tree = Tree(
+        feature=np.asarray(feature, np.int32),
+        threshold=np.asarray(threshold, np.float32),
+        is_cat=np.asarray(is_cat_l, bool),
+        cat_mask=cat_mask_arr,
+        children=np.asarray(children, np.int32),
+        value=np.stack(value).astype(np.float32),
+        n_node=np.asarray(n_node, np.float32),
+        gain=np.asarray(gain_l, np.float32),
+        depth=np.asarray(depth_l, np.int32),
+        m_num=m_num, task=task)
+    return tree, stats_log
+
+
+# ---------------------------------------------------------------------------
+# Prediction
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("m_num", "iters"))
+def _predict_jit(feature, threshold, is_cat, cat_mask, children, value,
+                 num, cat, m_num, iters):
+    B = num.shape[0] if num.size else cat.shape[0]
+    node = jnp.zeros((B,), jnp.int32)
+
+    def body(_, node):
+        f = feature[node]
+        leaf = f < 0
+        jn = jnp.clip(f, 0, max(m_num - 1, 0))
+        jc = jnp.clip(f - m_num, 0, max(cat.shape[1] - 1, 0))
+        xnum = (jnp.take_along_axis(num, jn[:, None], 1)[:, 0]
+                if num.size else jnp.zeros((B,), jnp.float32))
+        xcat = (jnp.take_along_axis(cat, jc[:, None], 1)[:, 0]
+                if cat.size else jnp.zeros((B,), jnp.int32))
+        go_left = jnp.where(is_cat[node], cat_mask[node, xcat],
+                            xnum <= threshold[node])
+        nxt = jnp.where(go_left, children[node, 0], children[node, 1])
+        return jnp.where(leaf, node, nxt)
+
+    node = jax.lax.fori_loop(0, iters, body, node)
+    return value[node]

@@ -1,0 +1,88 @@
+"""jit'd wrappers around the Pallas kernels.
+
+These adapt the tree builder's (sorted_idx, leaf_of, w, labels) state to the
+kernels' pre-gathered blocked layout, handle padding (row blocks, leaf-lane
+alignment), and select interpret mode automatically off-TPU.  The `"kernel"`
+numeric backend used by `tree.TreeParams(backend="kernel")` lands here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cat_hist, split_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_rows(n: int, bn: int) -> int:
+    return (-n) % bn
+
+
+def split_scan_supersplit(sorted_vals, sorted_idx, leaf_of, w, labels,
+                          cand, Lp, impurity="gini", task="classification",
+                          min_records=1.0, bn=256, interpret=None):
+    """All-columns supersplit via the Pallas kernel.
+
+    sorted_vals/sorted_idx: (m, n); cand: (m, Lp+1) bool;
+    returns (gain (m, Lp+1), thr (m, Lp+1)) matching the jnp backends.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, n = sorted_vals.shape
+    L1 = Lp + 1
+    s_dim = int(labels.max()) + 1 if task == "classification" else 3
+    s_dim = max(s_dim, 2) if task == "classification" else 3
+
+    leaf_g = leaf_of[sorted_idx]                      # (m, n)
+    w_g = w[sorted_idx]
+    y_g = labels[sorted_idx].astype(jnp.float32)
+
+    pad = _pad_rows(n, bn)
+    if pad:
+        sorted_vals = jnp.pad(sorted_vals, ((0, 0), (0, pad)))
+        leaf_g = jnp.pad(leaf_g, ((0, 0), (0, pad)))       # leaf 0 = closed
+        w_g = jnp.pad(w_g, ((0, 0), (0, pad)))             # w 0 = skipped
+        y_g = jnp.pad(y_g, ((0, 0), (0, pad)))
+
+    # global per-leaf totals per column (cheap; exact "right" histograms)
+    def tot(lf, ww, yy):
+        if task == "classification":
+            st = jax.nn.one_hot(yy.astype(jnp.int32), s_dim) * ww[:, None]
+        else:
+            st = jnp.stack([ww, ww * yy, ww * yy * yy], -1)
+        st = jnp.where(((ww > 0) & (lf > 0))[:, None], st, 0.0)
+        return jax.ops.segment_sum(st, lf, num_segments=L1)
+
+    totals = jax.vmap(tot)(leaf_g, w_g, y_g)          # (m, L1, S)
+
+    return split_scan.split_scan_pallas(
+        sorted_vals, leaf_g, w_g, y_g, cand.astype(jnp.float32), totals,
+        L1=L1, s_dim=s_dim, bn=bn, impurity=impurity, task=task,
+        min_records=min_records, interpret=interpret)
+
+
+def categorical_tables(cat_cols, leaf_of, w, labels, *, V, Lp,
+                       task="classification", bn=256, interpret=None):
+    """Count tables (m_cat, Lp+1, V, S) via the Pallas cat_hist kernel."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, n = cat_cols.shape
+    s_dim = int(labels.max()) + 1 if task == "classification" else 3
+    s_dim = max(s_dim, 2) if task == "classification" else 3
+    pad = _pad_rows(n, bn)
+    leaf_b = jnp.broadcast_to(leaf_of, (m, n))
+    w_b = jnp.broadcast_to(w, (m, n))
+    y_b = jnp.broadcast_to(labels.astype(jnp.float32), (m, n))
+    if pad:
+        cat_cols = jnp.pad(cat_cols, ((0, 0), (0, pad)))
+        leaf_b = jnp.pad(leaf_b, ((0, 0), (0, pad)))
+        w_b = jnp.pad(w_b, ((0, 0), (0, pad)))
+        y_b = jnp.pad(y_b, ((0, 0), (0, pad)))
+    return cat_hist.cat_hist_pallas(
+        cat_cols, leaf_b, w_b, y_b, L1=Lp + 1, V=V, s_dim=s_dim, bn=bn,
+        task=task, interpret=interpret)

@@ -1,0 +1,204 @@
+"""Pallas TPU kernel for the Alg. 1 supersplit scan (the DRF hot loop).
+
+GPU/CPU papers stream rows one at a time (Alg. 1's `for (a,y,i) in q(j)`);
+a TPU wants the same *semantics* re-blocked for the MXU/VPU and the
+HBM→VMEM hierarchy.  The adaptation (DESIGN.md §2):
+
+  * grid = (feature, row_block): row blocks stream sequentially per feature
+    (one HBM→VMEM pass per column per level — the paper's "read sequentially,
+    no random access"),
+  * the per-leaf histogram state H ∈ (L+1, S), last-seen value v, and
+    running best (gain, threshold) live in VMEM scratch and persist across
+    row blocks (the scan carry),
+  * within a block the sequential dependence is broken with an EXCLUSIVE
+    per-leaf prefix computed as one strict-lower-triangular matmul
+    (Bn × Bn) @ (Bn, (L+1)·S) — MXU work instead of a serial loop,
+  * the "previous in-bag value per leaf" needs a running max, computed with
+    log2(Bn) shift-max steps (VPU).
+
+Exactness: identical split choices to `repro.core.splits.best_numeric_split_scan`
+up to float summation order (verified in tests against ref.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = float("-inf")  # plain float: Pallas kernels must not capture array consts
+
+
+def _impurity(h: jnp.ndarray, kind: str) -> jnp.ndarray:
+    """Weighted (N·) impurity for stats (..., S)."""
+    if kind == "gini":
+        n = h.sum(-1)
+        return n - jnp.where(n > 0, (h * h).sum(-1) / jnp.maximum(n, 1e-12), 0.0)
+    if kind == "entropy":
+        n = h.sum(-1, keepdims=True)
+        p = h / jnp.maximum(n, 1e-12)
+        plogp = jnp.where(h > 0, p * jnp.log(jnp.maximum(p, 1e-12)), 0.0)
+        return -(n[..., 0] * plogp.sum(-1))
+    if kind == "variance":
+        w, wy, wy2 = h[..., 0], h[..., 1], h[..., 2]
+        return jnp.maximum(wy2 - jnp.where(w > 0, wy * wy / jnp.maximum(w, 1e-12), 0.0), 0.0)
+    raise ValueError(kind)
+
+
+def _count(h: jnp.ndarray, task: str) -> jnp.ndarray:
+    return h.sum(-1) if task == "classification" else h[..., 0]
+
+
+def _row_stats(y: jnp.ndarray, w: jnp.ndarray, s_dim: int, task: str) -> jnp.ndarray:
+    if task == "classification":
+        cls = jax.nn.one_hot(y.astype(jnp.int32), s_dim, dtype=jnp.float32)
+        return cls * w[:, None]
+    yf = y.astype(jnp.float32)
+    return jnp.stack([w, w * yf, w * yf * yf], axis=-1)
+
+
+def _excl_cummax(m: jnp.ndarray) -> jnp.ndarray:
+    """Exclusive running max along axis 0 via log-steps (B, L) -> (B, L)."""
+    b = m.shape[0]
+    out = jnp.concatenate([jnp.full((1,) + m.shape[1:], NEG), m[:-1]], axis=0)
+    shift = 1
+    while shift < b:
+        shifted = jnp.concatenate(
+            [jnp.full((shift,) + m.shape[1:], NEG), out[:-shift]], axis=0)
+        out = jnp.maximum(out, shifted)
+        shift *= 2
+    return out
+
+
+def _split_scan_kernel(vals_ref, leaf_ref, w_ref, y_ref, cand_ref, totals_ref,
+                       gain_ref, thr_ref,
+                       h_scr, v_scr, bs_scr, bt_scr,
+                       *, L1: int, s_dim: int, bn: int, nblocks: int,
+                       impurity: str, task: str, min_records: float):
+    """One (feature, row_block) grid step."""
+    jb = pl.program_id(1)
+
+    @pl.when(jb == 0)
+    def _init():
+        h_scr[...] = jnp.zeros((L1, s_dim), jnp.float32)
+        v_scr[...] = jnp.full((1, L1), jnp.inf, jnp.float32)   # "null" sentinel
+        bs_scr[...] = jnp.full((1, L1), NEG)
+        bt_scr[...] = jnp.zeros((1, L1), jnp.float32)
+
+    vals = vals_ref[0, :]                      # (Bn,)
+    leaf = leaf_ref[0, :].astype(jnp.int32)
+    w = w_ref[0, :]
+    y = y_ref[0, :]
+    cand = cand_ref[0, :]                      # (L1,) float mask
+    totals = totals_ref[0]                     # (L1, S)
+
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (bn, L1), 1)
+    onehot = (lanes == leaf[:, None]).astype(jnp.float32)
+    inbag = (w > 0) & (leaf > 0)
+    # gather cand[leaf] as a one-hot contraction (TPU-friendly, no gather)
+    cand_k = jnp.sum(onehot * cand[None, :], axis=1)
+    active = inbag & (cand_k > 0)
+    oh_act = onehot * active[:, None].astype(jnp.float32)
+
+    stats = _row_stats(y, w, s_dim, task) * active[:, None]   # (Bn, S)
+    contrib = oh_act[:, :, None] * stats[:, None, :]          # (Bn, L1, S)
+    flat = contrib.reshape(bn, L1 * s_dim)
+
+    # exclusive per-leaf prefix within the block: strict lower-triangular matmul
+    tril = (jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 0)
+            > jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 1)).astype(jnp.float32)
+    local_excl = jax.lax.dot(tril, flat,
+                             precision=jax.lax.Precision.HIGHEST)
+    left_full = h_scr[...][None] + local_excl.reshape(bn, L1, s_dim)
+    left = jnp.sum(left_full * onehot[:, :, None], axis=1)    # (Bn, S) gather
+    tot_k = jnp.sum(totals[None] * onehot[:, :, None], axis=1)
+    right = tot_k - left
+
+    # previous in-bag value per leaf (values ascend within a column)
+    mvals = jnp.where((onehot > 0) & inbag[:, None], vals[:, None], NEG)
+    pv_local = _excl_cummax(mvals)                            # (Bn, L1)
+    v_carry = v_scr[0]                                        # (L1,) +inf = none
+    v_carry_neg = jnp.where(jnp.isfinite(v_carry), v_carry, NEG)
+    pv_all = jnp.maximum(pv_local, v_carry_neg[None, :])
+    pv = jnp.max(jnp.where(onehot > 0, pv_all, NEG), axis=1)  # (Bn,)
+
+    tau = (vals + pv) * 0.5
+    parent_imp = _impurity(left + right, impurity)
+    gain = parent_imp - _impurity(left, impurity) - _impurity(right, impurity)
+    ok = active & (vals > pv) & (pv > NEG) \
+        & (_count(left, task) >= min_records) \
+        & (_count(right, task) >= min_records)
+    gain = jnp.where(ok, gain, NEG)
+
+    # per-leaf best within the block, first-row tie-break (scan order)
+    gmat = jnp.where(onehot > 0, gain[:, None], NEG)          # (Bn, L1)
+    blk_best = jnp.max(gmat, axis=0)                          # (L1,)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bn, L1), 0)
+    first = jnp.min(jnp.where(gmat >= blk_best[None, :], rows, bn), axis=0)
+    first_c = jnp.clip(first, 0, bn - 1)
+    blk_thr = jnp.sum(
+        jnp.where((rows == first_c[None, :]), tau[:, None], 0.0), axis=0)
+
+    better = blk_best > bs_scr[0]
+    bs_scr[...] = jnp.where(better, blk_best, bs_scr[0])[None]
+    bt_scr[...] = jnp.where(better, blk_thr, bt_scr[0])[None]
+
+    # carry updates
+    h_scr[...] = h_scr[...] + contrib.sum(axis=0)
+    blk_last = jnp.max(mvals, axis=0)                         # (L1,)
+    new_v = jnp.maximum(v_carry_neg, blk_last)
+    v_scr[...] = jnp.where(jnp.isfinite(new_v), new_v, jnp.inf)[None]
+
+    @pl.when(jb == nblocks - 1)
+    def _emit():
+        gain_ref[...] = bs_scr[...]
+        thr_ref[...] = bt_scr[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("L1", "s_dim", "bn", "impurity", "task", "min_records",
+                     "interpret"))
+def split_scan_pallas(
+    vals: jnp.ndarray,     # (m, n) sorted values per feature
+    leaf: jnp.ndarray,     # (m, n) int32 leaf ids in sorted order
+    w: jnp.ndarray,        # (m, n) bag weights in sorted order
+    y: jnp.ndarray,        # (m, n) labels in sorted order
+    cand: jnp.ndarray,     # (m, L1) float32 candidate mask (leaf 0 = 0)
+    totals: jnp.ndarray,   # (m, L1, S) global per-leaf stat totals
+    *, L1: int, s_dim: int, bn: int = 256,
+    impurity: str = "gini", task: str = "classification",
+    min_records: float = 1.0, interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Best (gain, threshold) per (feature, leaf): (m, L1) each."""
+    m, n = vals.shape
+    assert n % bn == 0, f"n={n} must be a multiple of bn={bn} (pad rows)"
+    nblocks = n // bn
+    grid = (m, nblocks)
+
+    kernel = functools.partial(
+        _split_scan_kernel, L1=L1, s_dim=s_dim, bn=bn, nblocks=nblocks,
+        impurity=impurity, task=task, min_records=min_records)
+
+    row_spec = pl.BlockSpec((1, bn), lambda i, j: (i, j))
+    out_spec = pl.BlockSpec((1, L1), lambda i, j: (i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[row_spec, row_spec, row_spec, row_spec,
+                  pl.BlockSpec((1, L1), lambda i, j: (i, 0)),
+                  pl.BlockSpec((1, L1, s_dim), lambda i, j: (i, 0, 0))],
+        out_specs=[out_spec, out_spec],
+        out_shape=[jax.ShapeDtypeStruct((m, L1), jnp.float32),
+                   jax.ShapeDtypeStruct((m, L1), jnp.float32)],
+        scratch_shapes=[
+            # VMEM carries: histogram, last value, best gain, best threshold
+            pltpu.VMEM((L1, s_dim), jnp.float32),
+            pltpu.VMEM((1, L1), jnp.float32),
+            pltpu.VMEM((1, L1), jnp.float32),
+            pltpu.VMEM((1, L1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(vals, leaf, w, y, cand, totals)

@@ -1,0 +1,251 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines, before any jax import: the dry-run (and
+# ONLY the dry-run) needs 512 placeholder devices for the production mesh.
+
+"""Multi-pod dry-run (assignment MULTI-POD DRY-RUN step 3).
+(note: no `from __future__` here — the XLA_FLAGS lines must stay first)
+
+For every (architecture × input shape): build the step function + abstract
+inputs (launch/specs.py), `jit(...).lower(...)` with the production
+shardings, `.compile()`, and record memory_analysis / cost_analysis /
+roofline terms.  Runs for the 16×16 single-pod mesh and the (2,16,16)
+multi-pod mesh.  Any sharding mismatch / compile OOM / unsupported
+collective here is a bug in the system.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--multi-pod] [--drf] [--out results.jsonl] [--hlo-dir DIR]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import INPUT_SHAPES, get_arch, list_archs
+from repro.launch import mesh as mesh_lib, roofline, specs
+from repro.models import transformer
+
+
+def _mem_summary(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    out["total_bytes_per_device"] = (
+        out.get("argument_size_in_bytes", 0) + out.get("temp_size_in_bytes", 0)
+        + out.get("output_size_in_bytes", 0) - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def run_one(arch: str, shape: str, *, multi_pod: bool = False,
+            overrides=None, hlo_dir=None, verbose=True,
+            accounting: bool = True) -> dict:
+    cfg = get_arch(arch)
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    reason = specs.skip_reason(cfg, shape)
+    if reason:
+        rec.update(status="skipped", reason=reason)
+        if verbose:
+            print(f"SKIP {arch:23s} {shape:12s} {rec['mesh']:8s} {reason}",
+                  flush=True)
+        return rec
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        # PASS 1 — memory: scan (loop) form.  XLA-CPU's scheduler inflates
+        # liveness ~10x on fully unrolled graphs (measured: qwen3 train_4k
+        # 98 GiB unrolled vs 11.1 GiB as a loop, same computation); the loop
+        # form is the realistic capacity number that must fit 16 GB/chip.
+        fn, args, out_sh, donate = specs.lowerable_for(
+            cfg, shape, mesh, overrides, unroll=False)
+        kw = {"donate_argnums": donate} if donate else {}
+        if out_sh is not None:
+            kw["out_shardings"] = out_sh
+        compiled_mem = jax.jit(fn, **kw).lower(*args).compile()
+        mem = _mem_summary(compiled_mem)
+        t_mem = time.time() - t0
+        del compiled_mem
+
+        terms = None
+        if accounting:
+            # PASS 2 — accounting by linear extrapolation: a lax.scan body
+            # is counted ONCE by cost_analysis regardless of trip count, so
+            # compile the loop with unroll=1 and unroll=u2 (both cheap loop
+            # forms; the blocks are identical) and solve
+            #   f(u) = outside + u*block  =>  total = outside + nb*block.
+            # Full unrolling gives the same totals but is 10-30x slower to
+            # compile for the deep models (jamba: >30 min vs ~2 min).
+            t0 = time.time()
+            nb = cfg.num_blocks
+            u2 = 2 if nb % 2 == 0 else (3 if nb % 3 == 0 else None)
+            compiled_u = {}
+            for u in ([1, u2] if u2 else [1]):
+                fn, args, out_sh, donate = specs.lowerable_for(
+                    cfg, shape, mesh, overrides, unroll=u)
+                kw = {"donate_argnums": donate} if donate else {}
+                if out_sh is not None:
+                    kw["out_shardings"] = out_sh
+                compiled_u[u] = jax.jit(fn, **kw).lower(*args).compile()
+            t_acct = time.time() - t0
+        else:
+            compiled_u, t_acct = {}, 0.0
+
+        n_active = transformer.active_param_count(
+            specs.abstract_params(cfg), cfg)
+        mf = roofline.model_flops(cfg, shape, n_active)
+        rec.update(status="ok", mem_compile_s=round(t_mem, 1),
+                   acct_compile_s=round(t_acct, 1), memory=mem,
+                   n_active_params=int(n_active))
+        if compiled_u:
+            nb = cfg.num_blocks
+            if u2:
+                terms = roofline.extract_extrapolated(
+                    compiled_u[1], compiled_u[u2], 1, u2, nb,
+                    arch=arch, shape=shape, mesh_name=rec["mesh"],
+                    chips=chips, model_flops_global=mf)
+            else:
+                terms = roofline.extract(
+                    compiled_u[1], arch=arch, shape=shape,
+                    mesh_name=rec["mesh"], chips=chips,
+                    model_flops_global=mf)
+            rec.update(roofline=terms.row())
+        if hlo_dir and compiled_u:
+            import pathlib
+            p = pathlib.Path(hlo_dir)
+            p.mkdir(parents=True, exist_ok=True)
+            (p / f"{arch}.{shape}.{rec['mesh']}.hlo.txt").write_text(
+                compiled_u[1].as_text())
+        if verbose:
+            msg = (f"OK  {arch:24s} {shape:12s} {rec['mesh']:8s} "
+                   f"mem/dev={mem['total_bytes_per_device']/2**30:7.2f}GiB ")
+            if terms is not None:
+                r = terms.row()
+                msg += (f"compute={r['compute_s']*1e3:9.3f}ms "
+                        f"memory={r['memory_s']*1e3:9.3f}ms "
+                        f"coll={r['collective_s']*1e3:9.3f}ms "
+                        f"dom={r['dominant']:10s} "
+                        f"useful={r['useful_flops_ratio']:.3f}")
+            print(msg, flush=True)
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"ERR {arch:24s} {shape:12s} {rec['mesh']:8s} {e}", flush=True)
+    return rec
+
+
+def run_drf(*, multi_pod: bool = False, verbose=True,
+            n=2**22, m=128, num_leaves=255, backend="segment",
+            replicated_rows: bool = False, tag: str = "") -> dict:
+    """Dry-run the paper's own workload: one DRF supersplit level on the
+    production mesh (features over 'model', presorted rows over 'data').
+
+    `replicated_rows=True` = the paper's actual memory layout (§2.3: the
+    class list is replicated on every splitter), so no resharding
+    all-gather of (leaf_of, labels, w) is needed at the level boundary.
+    """
+    import jax.numpy as jnp
+    from repro.core import distributed
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rec = {"arch": "drf-level" + (f"-{tag}" if tag else ""),
+           "shape": f"n{n}_m{m}_L{num_leaves}",
+           "mesh": "2x16x16" if multi_pod else "16x16", "backend": backend}
+    try:
+        step = distributed.drf_level_step_fn(
+            mesh, num_leaves=num_leaves, num_classes=2, backend=backend,
+            row_axis="data")
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        fm = NamedSharding(mesh, P("model", "data"))
+        fr = NamedSharding(mesh, P() if replicated_rows else P("data"))
+        args = (
+            jax.ShapeDtypeStruct((m, n), jnp.float32, sharding=fm),   # sorted_vals
+            jax.ShapeDtypeStruct((m, n), jnp.int32, sharding=fm),     # sorted_idx
+            jax.ShapeDtypeStruct((n,), jnp.int32, sharding=fr),       # leaf_of
+            jax.ShapeDtypeStruct((n,), jnp.int32, sharding=fr),       # labels
+            jax.ShapeDtypeStruct((n,), jnp.float32, sharding=fr),     # w
+            jax.ShapeDtypeStruct((m, num_leaves + 1), jnp.bool_,
+                                 sharding=NamedSharding(mesh, P("model"))),
+        )
+        t0 = time.time()
+        lowered = jax.jit(step).lower(*args)
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 1)
+        mem = _mem_summary(compiled)
+        # "model flops": one pass histogram update ~ 8 flops/row/feature
+        mf = 8.0 * float(n) * m
+        terms = roofline.extract(compiled, arch="drf-level",
+                                 shape=rec["shape"], mesh_name=rec["mesh"],
+                                 chips=chips, model_flops_global=mf)
+        rec.update(status="ok", memory=mem, roofline=terms.row())
+        if verbose:
+            r = terms.row()
+            print(f"OK  drf-level {rec['shape']} {rec['mesh']} "
+                  f"mem/dev={mem['total_bytes_per_device']/2**30:.3f}GiB "
+                  f"compute={r['compute_s']*1e3:.3f}ms "
+                  f"memory={r['memory_s']*1e3:.3f}ms "
+                  f"coll={r['collective_s']*1e3:.3f}ms dom={r['dominant']}",
+                  flush=True)
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"ERR drf-level {e}", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--drf", action="store_true", help="also dry-run DRF")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--hlo-dir", default=None)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    records = []
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                # multi-pod pass proves the "pod" axis shards + fits;
+                # the roofline accounting table is single-pod only.
+                records.append(run_one(a, s, multi_pod=mp,
+                                       hlo_dir=args.hlo_dir,
+                                       accounting=not mp))
+        if args.drf:
+            records.append(run_drf(multi_pod=mp))
+
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+        with open(args.out, "a") as f:
+            for r in records:
+                f.write(json.dumps(r) + "\n")
+    ok = sum(r["status"] == "ok" for r in records)
+    sk = sum(r["status"] == "skipped" for r in records)
+    err = sum(r["status"] == "error" for r in records)
+    print(f"\n{ok} ok / {sk} skipped / {err} errors "
+          f"of {len(records)} combinations")
+    if err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh factory (assignment MULTI-POD DRY-RUN step 1).
+
+A FUNCTION, not a module constant — importing this module never touches
+jax device state.  Single pod: 16×16 = 256 chips (TPU v5e pod).  Multi-pod:
+(2, 16, 16) = 512 chips with a leading "pod" axis (DP across pods; the
+"pod" axis shards the global batch together with "data").
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 2, model: int = 4):
+    """Small mesh over forced host devices, for distributed-engine tests."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto))

@@ -1,0 +1,188 @@
+"""Roofline-term extraction from compiled dry-run artifacts (assignment
+§ROOFLINE ANALYSIS).
+
+  compute term    = HLO_FLOPs_global / (chips × peak_FLOP/s)
+  memory term     = HLO_bytes_global / (chips × HBM_bw)
+  collective term = collective_bytes_global / (chips × link_bw)
+
+`compiled.cost_analysis()` describes the per-device partitioned module, so
+global = per-device × chips and the per-chip terms reduce to
+per-device / peak.  Collective bytes are NOT in cost_analysis: we parse the
+post-SPMD optimized HLO (`compiled.as_text()`) and sum result-shape bytes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, with an all-reduce counted 2× (ring RS+AG).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (assignment block).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^(]*\(")
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-op-kind result bytes (per device) from post-SPMD HLO."""
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    counts = dict.fromkeys(out, 0)
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_s, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(shape_s)
+        counts[kind] += 1
+    wire = sum(b * (2 if k == "all-reduce" else 1) for k, b in out.items())
+    return {"bytes_by_kind": out, "counts": counts, "wire_bytes": wire}
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops_global: float
+    collectives: dict
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops_global,
+            "hlo_flops_per_dev": self.flops_per_device,
+            "hlo_bytes_per_dev": self.bytes_per_device,
+            "coll_bytes_per_dev": self.collective_bytes_per_device,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "collective_counts": self.collectives["counts"],
+            "collective_bytes": self.collectives["bytes_by_kind"],
+        }
+
+
+def model_flops(cfg, shape_name: str, n_active: int) -> float:
+    """6·N·D for training, 2·N·D for inference (N = active params)."""
+    from repro.configs.base import INPUT_SHAPES
+    s = INPUT_SHAPES[shape_name]
+    if s["kind"] == "train":
+        tokens = s["global_batch"] * s["seq_len"]
+        return 6.0 * n_active * tokens
+    if s["kind"] == "prefill":
+        tokens = s["global_batch"] * s["seq_len"]
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * s["global_batch"]          # decode: 1 token/seq
+
+
+def _cost(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):                          # older jax returns [dict]
+        cost = cost[0]
+    return cost
+
+
+def extract(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
+            model_flops_global: float) -> RooflineTerms:
+    cost = _cost(compiled)
+    coll = parse_collectives(compiled.as_text())
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=float(cost.get("flops", 0.0)),
+        bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes_per_device=float(coll["wire_bytes"]),
+        model_flops_global=model_flops_global,
+        collectives=coll)
+
+
+def extract_extrapolated(c1, c2, u1: int, u2: int, nb: int, *, arch: str,
+                         shape: str, mesh_name: str, chips: int,
+                         model_flops_global: float) -> RooflineTerms:
+    """Totals from two loop-form compiles with unroll factors u1 < u2.
+
+    cost_analysis counts a scan body once, so f(u) = outside + u·block for
+    every additive metric; total = outside + nb·block.  Exact when the nb
+    blocks are structurally identical (they are: stacked layer params).
+    """
+    def lin(a, b):
+        block = (b - a) / (u2 - u1)
+        return max(a + (nb - u1) * block, 0.0)
+
+    k1, k2 = _cost(c1), _cost(c2)
+    coll1 = parse_collectives(c1.as_text())
+    coll2 = parse_collectives(c2.as_text())
+    coll = {
+        "bytes_by_kind": {k: int(lin(coll1["bytes_by_kind"][k],
+                                     coll2["bytes_by_kind"][k]))
+                          for k in coll1["bytes_by_kind"]},
+        "counts": {k: int(round(lin(coll1["counts"][k], coll2["counts"][k])))
+                   for k in coll1["counts"]},
+    }
+    coll["wire_bytes"] = sum(b * (2 if k == "all-reduce" else 1)
+                             for k, b in coll["bytes_by_kind"].items())
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=lin(float(k1.get("flops", 0.0)),
+                             float(k2.get("flops", 0.0))),
+        bytes_per_device=lin(float(k1.get("bytes accessed", 0.0)),
+                             float(k2.get("bytes accessed", 0.0))),
+        collective_bytes_per_device=float(coll["wire_bytes"]),
+        model_flops_global=model_flops_global,
+        collectives=coll)

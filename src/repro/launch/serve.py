@@ -1,0 +1,75 @@
+"""Serving driver: prefill + batched decode for a selected architecture.
+
+CPU-sized by default (reduced config); the production path is exercised
+shape-for-shape by launch/dryrun.py (decode_32k / long_500k lower
+serve.decode_step on the pod meshes).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_arch
+from repro.models import transformer
+from repro.serve import engine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(key, cfg)
+    B, P, G = args.batch, args.prompt_len, args.gen_len
+    max_seq = P + G
+
+    if cfg.input_mode == "tokens":
+        prompts = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+    else:
+        prompts = jax.random.normal(key, (B, P, cfg.d_model), jnp.bfloat16)
+
+    t0 = time.time()
+    logits, caches = jax.jit(
+        lambda p, x: engine.prefill_step(p, x, cfg))(params, prompts)
+    # pad caches to max_seq along the cache-seq dim (attn caches only)
+    caches = jax.tree_util.tree_map(
+        lambda c: jnp.concatenate(
+            [c, jnp.zeros(c.shape[:2] + (G,) + c.shape[3:], c.dtype)], axis=2)
+        if c.ndim >= 4 and c.shape[2] == P else c, caches)
+    print(f"prefill {B}x{P}: {time.time()-t0:.2f}s")
+
+    decode = jax.jit(lambda p, c, t, l: transformer.decode_step(p, c, t, l, cfg))
+    lens = jnp.full((B,), P, jnp.int32)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None]
+    t0 = time.time()
+    generated = [tok]
+    for _ in range(G - 1):
+        if cfg.input_mode != "tokens":
+            step_in = jax.random.normal(key, (B, 1, cfg.d_model), jnp.bfloat16)
+        else:
+            step_in = generated[-1]
+        lg, caches = decode(params, caches, step_in, lens)
+        lens = lens + 1
+        generated.append(jnp.argmax(lg[:, -1], -1)[:, None])
+    dt = time.time() - t0
+    print(f"decode {G-1} steps x {B} seqs: {dt:.2f}s "
+          f"({(G-1)*B/max(dt,1e-9):.1f} tok/s)")
+    out = jnp.concatenate(generated, axis=1)
+    print("sample tokens:", out[0][:10].tolist())
+
+
+if __name__ == "__main__":
+    main()

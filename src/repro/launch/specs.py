@@ -1,0 +1,219 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × input-shape)
+workload — the dry-run never allocates real arrays (assignment step 2).
+
+For each shape kind:
+  train_4k    -> train_step(state, batch)
+  prefill_32k -> prefill_step(params, inputs)
+  decode_*    -> decode_step(params, caches, inputs, cache_len)
+
+Shardings follow train/sharding.py logical rules; decode_32k uses the
+"batch-over-data" cache recipe, long_500k the "seq-over-data" recipe.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, ArchConfig
+from repro.models import transformer
+from repro.optim import adamw
+from repro.serve import engine
+from repro.train import sharding as shd, step as train_step_lib
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _batch_axes(mesh, rules):
+    return shd.logical_spec(("batch",), mesh, rules)[0]
+
+
+def moments_dtype_for(cfg: ArchConfig) -> str:
+    """bf16 Adam moments for models whose f32 moments would blow the pod
+    HBM budget (jamba-398b, dbrx-132b); f32 elsewhere.  See DESIGN.md."""
+    big = cfg.d_model * cfg.d_ff * cfg.num_layers
+    if cfg.num_experts:
+        big *= cfg.num_experts
+    return "bfloat16" if big > 2**40 else "float32"
+
+
+def make_train_cfg(cfg: ArchConfig, unroll=True,
+                   microbatches: int = 1,
+                   remat: str = "full") -> train_step_lib.TrainConfig:
+    return train_step_lib.TrainConfig(
+        optimizer=adamw.AdamWConfig(moments_dtype=moments_dtype_for(cfg)),
+        unroll=unroll, ce_unroll=bool(unroll), remat=remat,
+        # accounting passes (unroll != False) keep mb=1: identical math over
+        # the full batch, so FLOP/collective totals are exact; the memory
+        # pass uses the real microbatch schedule.
+        microbatches=1 if unroll else microbatches)
+
+
+# ---------------------------------------------------------------------------
+# Abstract state / batch / cache builders
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda: transformer.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_state(cfg: ArchConfig, tcfg):
+    return jax.eval_shape(
+        lambda: train_step_lib.init_train_state(jax.random.PRNGKey(0), cfg, tcfg))
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    return jax.eval_shape(lambda: transformer.init_cache(cfg, batch, max_seq))
+
+
+def batch_struct(cfg: ArchConfig, shape_name: str, mesh, rules):
+    s = INPUT_SHAPES[shape_name]
+    B, S = s["global_batch"], s["seq_len"]
+    bspec = shd.logical_spec(("batch", "seq"), mesh, rules)
+    if cfg.input_mode == "tokens":
+        inputs = _sds((B, S), jnp.int32, _ns(mesh, bspec))
+    else:
+        inputs = _sds((B, S, cfg.d_model), jnp.bfloat16,
+                      _ns(mesh, shd.logical_spec(("batch", "seq", None),
+                                                 mesh, rules)))
+    labels = _sds((B, S), jnp.int32, _ns(mesh, bspec))
+    return {"inputs": inputs, "labels": labels}
+
+
+_CACHE_AXES = {
+    "k":    (None, "batch", "cache_seq", "kv_heads", None),
+    "v":    (None, "batch", "cache_seq", "kv_heads", None),
+    "conv": (None, "batch", None, "d_inner"),
+    "h":    (None, "batch", "d_inner", "state"),
+    "x_tm": (None, "batch", None),
+    "x_cm": (None, "batch", None),
+    "S":    (None, "batch", "heads", None, None),
+}
+
+
+def cache_shardings(cfg: ArchConfig, batch: int, max_seq: int, mesh, rules):
+    shapes = abstract_cache(cfg, batch, max_seq)
+
+    def walk(path, leaf):
+        name = path[-1].key
+        axes = _CACHE_AXES[name]
+        return _ns(mesh, shd.logical_spec(axes, mesh, rules, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(walk, shapes)
+
+
+def with_shardings(structs, shardings):
+    return jax.tree_util.tree_map(
+        lambda s, sh: _sds(s.shape, s.dtype, sh), structs, shardings)
+
+
+# ---------------------------------------------------------------------------
+# Lowerables: (fn, example_args, in_shardings-embedded) per workload
+# ---------------------------------------------------------------------------
+
+def train_lowerable(cfg: ArchConfig, shape_name: str, mesh, overrides=None,
+                    unroll=True):
+    overrides = dict(overrides or {})
+    mb = int(overrides.pop("microbatches", 1) or 1)
+    remat = overrides.pop("remat", "full") or "full"
+    rules = shd.make_rules(mesh, overrides)
+    tcfg = make_train_cfg(cfg, unroll=unroll, microbatches=mb, remat=remat)
+    state_struct = abstract_state(cfg, tcfg)
+    pspecs = shd.tree_param_specs(state_struct["params"], mesh, rules)
+    ospecs = {
+        "mu": shd.tree_param_specs(state_struct["opt"]["mu"], mesh, rules),
+        "nu": shd.tree_param_specs(state_struct["opt"]["nu"], mesh, rules),
+        "step": _ns(mesh, P()),
+    }
+    state = with_shardings(state_struct, {"params": pspecs, "opt": ospecs})
+    batch = batch_struct(cfg, shape_name, mesh, rules)
+    raw_step = train_step_lib.make_train_step(cfg, tcfg)
+
+    def step(state, batch):
+        with shd.use_mesh_rules(mesh, overrides):
+            return raw_step(state, batch)
+
+    out_sh = ({"params": pspecs, "opt": ospecs},
+              {k: _ns(mesh, P()) for k in ("loss", "ce", "aux", "grad_norm", "lr")})
+    return step, (state, batch), out_sh, (0,)   # donate the train state
+
+
+def prefill_lowerable(cfg: ArchConfig, shape_name: str, mesh, overrides=None,
+                      unroll=True):
+    rules = shd.make_rules(mesh, overrides)
+    pstruct = abstract_params(cfg)
+    pspecs = shd.tree_param_specs(pstruct, mesh, rules)
+    params = with_shardings(pstruct, pspecs)
+    batch = batch_struct(cfg, shape_name, mesh, rules)
+    s = INPUT_SHAPES[shape_name]
+    # returned caches: batch over data, SEQ over model (kv_heads rarely
+    # divide the model axis) — the layout decode_32k consumes.
+    crules = shd.make_rules(mesh, dict(shd.DECODE_OVERRIDES,
+                                       **(overrides or {})))
+    cspecs = cache_shardings(cfg, s["global_batch"], s["seq_len"], mesh,
+                             crules)
+
+    def step(params, inputs):
+        with shd.use_mesh_rules(mesh, overrides):
+            return engine.prefill_step(params, inputs, cfg, unroll=unroll)
+
+    return step, (params, batch["inputs"]), (None, cspecs), ()
+
+
+def decode_lowerable(cfg: ArchConfig, shape_name: str, mesh, overrides=None,
+                     unroll=True):
+    s = INPUT_SHAPES[shape_name]
+    B, S = s["global_batch"], s["seq_len"]
+    base = (shd.LONG_CONTEXT_OVERRIDES if shape_name == "long_500k"
+            else shd.DECODE_OVERRIDES)
+    overrides = dict(base, **(overrides or {}))
+    rules = shd.make_rules(mesh, overrides)
+    pstruct = abstract_params(cfg)
+    pspecs = shd.tree_param_specs(pstruct, mesh, rules)
+    params = with_shardings(pstruct, pspecs)
+    cstruct = abstract_cache(cfg, B, S)
+    cspecs = cache_shardings(cfg, B, S, mesh, rules)
+    caches = with_shardings(cstruct, cspecs)
+    bspec = shd.logical_spec(("batch",), mesh, rules)
+    if cfg.input_mode == "tokens":
+        inputs = _sds((B, 1), jnp.int32,
+                      _ns(mesh, shd.logical_spec(("batch", None), mesh, rules)))
+    else:
+        inputs = _sds((B, 1, cfg.d_model), jnp.bfloat16,
+                      _ns(mesh, shd.logical_spec(("batch", None, None), mesh, rules)))
+    cache_len = _sds((B,), jnp.int32, _ns(mesh, bspec))
+
+    def step(params, caches, inputs, cache_len):
+        with shd.use_mesh_rules(mesh, overrides):
+            return engine.decode_step(params, caches, inputs, cache_len, cfg,
+                                      unroll=unroll)
+
+    out_sh = (None, cspecs)   # keep cache sharding stable step-to-step
+    return step, (params, caches, inputs, cache_len), out_sh, (1,)  # donate cache
+
+
+def lowerable_for(cfg: ArchConfig, shape_name: str, mesh, overrides=None,
+                  unroll=True):
+    kind = INPUT_SHAPES[shape_name]["kind"]
+    if kind == "train":
+        return train_lowerable(cfg, shape_name, mesh, overrides, unroll)
+    if kind == "prefill":
+        return prefill_lowerable(cfg, shape_name, mesh, overrides, unroll)
+    return decode_lowerable(cfg, shape_name, mesh, overrides, unroll)
+
+
+def skip_reason(cfg: ArchConfig, shape_name: str) -> str | None:
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return ("full quadratic attention, no sliding-window variant: "
+                "long_500k requires sub-quadratic attention (DESIGN.md §5)")
+    return None

@@ -1,0 +1,101 @@
+"""End-to-end LM training driver.
+
+On real hardware this runs with the production mesh; on CPU (CI/dev) pass
+--smoke to train the reduced config on a 1-device mesh.  Used by
+examples/train_lm.py for the ~100M-param few-hundred-step requirement.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
+      --steps 200 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.data.synthetic import TokenStream
+from repro.checkpoint import io as ckpt_io
+from repro.models import transformer
+from repro.optim import adamw
+from repro.train import sharding as shd, step as train_step_lib
+
+
+def train_loop(cfg, *, steps: int, batch: int, seq: int, lr: float = 3e-4,
+               seed: int = 0, log_every: int = 10, mesh=None,
+               checkpoint_path: str | None = None, ce_chunks: int = 4):
+    tcfg = train_step_lib.TrainConfig(
+        optimizer=adamw.AdamWConfig(lr=lr, warmup_steps=max(steps // 10, 1),
+                                    total_steps=steps),
+        ce_chunks=ce_chunks)
+    key = jax.random.PRNGKey(seed)
+    state = train_step_lib.init_train_state(key, cfg, tcfg)
+    n_params = transformer.param_count(state["params"])
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M steps={steps} "
+          f"batch={batch} seq={seq}", flush=True)
+
+    step_fn = train_step_lib.make_train_step(cfg, tcfg)
+    if mesh is not None:
+        pspecs = shd.tree_param_specs(state["params"], mesh)
+
+        def wrapped(state, batch_):
+            with shd.use_mesh_rules(mesh):
+                return step_fn(state, batch_)
+
+        step_jit = jax.jit(wrapped, donate_argnums=0)
+        state = jax.device_put(state, {
+            "params": pspecs,
+            "opt": {"mu": shd.tree_param_specs(state["opt"]["mu"], mesh),
+                    "nu": shd.tree_param_specs(state["opt"]["nu"], mesh),
+                    "step": None}})
+    else:
+        step_jit = jax.jit(step_fn, donate_argnums=0)
+
+    stream = TokenStream(cfg.vocab_size, seq, batch, seed)
+    losses = []
+    t0 = time.time()
+    for i, raw in zip(range(steps), stream):
+        batch_ = {"inputs": jnp.asarray(raw["inputs"]),
+                  "labels": jnp.asarray(raw["labels"])}
+        state, m = step_jit(state, batch_)
+        losses.append(float(m["ce"]))
+        if i % log_every == 0 or i == steps - 1:
+            dt = time.time() - t0
+            print(f"step {i:5d}  ce={losses[-1]:.4f}  "
+                  f"aux={float(m['aux']):.4f}  gnorm={float(m['grad_norm']):.2f}  "
+                  f"lr={float(m['lr']):.2e}  {dt:.1f}s", flush=True)
+    if checkpoint_path:
+        ckpt_io.save(checkpoint_path, state)
+        print(f"checkpoint -> {checkpoint_path}", flush=True)
+    return state, losses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    _, losses = train_loop(cfg, steps=args.steps, batch=args.batch,
+                           seq=args.seq, lr=args.lr,
+                           checkpoint_path=args.checkpoint)
+    first, last = np.mean(losses[:10]), np.mean(losses[-10:])
+    print(f"ce first10={first:.4f} last10={last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+
+
+if __name__ == "__main__":
+    main()

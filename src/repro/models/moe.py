@@ -1,0 +1,138 @@
+"""Mixture-of-Experts FFN: top-k router + shard-local sort-based dispatch +
+all_to_all expert parallelism.
+
+Routing is computed PER DATA SHARD (the token dim is reshaped to
+(W, T/W, ...) with W = the mesh's batch-sharding factor, and all routing
+ops are vmapped over that leading sharded dim, so sorts/gathers/scatters
+never cross shards — GSPMD partitions them trivially).  The dispatched
+buffer (W, E, cap_w, D) is then resharded from W-over-data to
+E-over-data — exactly the expert-parallel all_to_all — experts compute
+with their FFN dim tensor-parallel over "model", and the combine reverses
+the path.
+
+A GLOBAL-index scatter over all W shards (the naive formulation) makes
+GSPMD partition arbitrary-index scatter/gather — it replicates the token
+buffer per device and its backward is pathologically slow to partition
+(observed: jamba train_4k compile hang >20 min, olmoe 332 GiB/device).
+The shard-local form compiles in seconds.  Tokens over a shard-local
+expert capacity are dropped (standard capacity-factor semantics).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import sharding as shd
+
+
+def init_moe(key, cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "router": jax.random.normal(k1, (d, e), jnp.float32) * s,
+        "we1": jax.random.normal(k2, (e, d, f), dt) * s,
+        "we3": jax.random.normal(k3, (e, d, f), dt) * s,
+        "we2": jax.random.normal(k4, (e, f, d), dt) * (1.0 / math.sqrt(f)),
+    }
+
+
+def _batch_shards(B: int) -> int:
+    """How many ways the token dim is sharded on the active mesh."""
+    mesh = shd._mesh()
+    rules = shd._rules()
+    if mesh is None or rules is None:
+        return 1
+    ax = rules.get("batch")
+    if ax is None:
+        return 1
+    axes = (ax,) if isinstance(ax, str) else ax
+    w = 1
+    for a in axes:
+        w *= mesh.shape[a]
+    return w if B % w == 0 else 1
+
+
+def _route_local(xw, p, cfg, cap):
+    """Shard-local dispatch.  xw: (Tw, D) tokens of ONE shard slice.
+
+    Returns (xe (E, cap, D), meta for the combine).
+    """
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    Tw, D = xw.shape
+    logits = jnp.einsum("td,de->te", xw.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.mean(0)
+    ce = jnp.zeros((E,)).at[eidx.reshape(-1)].add(1.0) / (Tw * K)
+    aux = E * jnp.sum(me * ce)
+
+    flat_e = eidx.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(Tw), K)
+    flat_g = gate.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    counts = jnp.zeros((E,), jnp.int32).at[se].add(1)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(Tw * K) - offsets[se]
+    keep = rank < cap
+    slot_e = jnp.where(keep, se, E - 1)
+    slot_c = jnp.where(keep, rank, cap - 1)
+    xe = jnp.zeros((E, cap, D), xw.dtype).at[slot_e, slot_c].add(
+        jnp.where(keep[:, None], xw[st], 0).astype(xw.dtype))
+    return xe, (st, sg, slot_e, slot_c, keep), aux
+
+
+def _combine_local(ye, meta, Tw, dtype):
+    st, sg, slot_e, slot_c, keep = meta
+    back = ye[slot_e, slot_c]
+    contrib = jnp.where(keep[:, None], back * sg[:, None].astype(dtype), 0)
+    D = ye.shape[-1]
+    return jnp.zeros((Tw, D), dtype).at[st].add(contrib)
+
+
+def moe_ffn(p, x, cfg):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    W = _batch_shards(B)
+    Tw = T // W
+    cap = max(4, int(math.ceil(Tw * K / E * cfg.capacity_factor)))
+
+    xw = x.reshape(W, Tw, D)                                # W over "batch" axes
+    xw = shd.shard(xw, ("batch", None, None))
+    xe, meta, aux = jax.vmap(
+        lambda t: _route_local(t, p, cfg, cap))(xw)          # (W, E, cap, D)
+    aux = aux.mean()
+
+    # expert-parallel resharding: W-over-batch-axes -> E-over-expert-axis
+    # (all_to_all).  In the pure-EP layout ("experts" mapped to the same
+    # axis as "ff") experts own their whole FFN, so the inner dim must NOT
+    # also be constrained to that axis.
+    rules = shd._rules()
+    ep_pure = rules is not None and rules.get("experts") is not None \
+        and rules.get("experts") == rules.get("ff")
+    # pure-EP: tokens STAY sharded over the batch axes while experts carry
+    # the model axis — 2-D (W, E) sharding, 256-way parallel compute, and
+    # neither expert matmul contracts a sharded dim (no per-layer AR).
+    wdim = "batch" if ep_pure else None
+    xe = shd.shard(xe, (wdim, "experts", None, None))
+    h1 = jnp.einsum("wecd,edf->wecf", xe, p["we1"])
+    h3 = jnp.einsum("wecd,edf->wecf", xe, p["we3"])
+    h = jax.nn.silu(h1) * h3
+    h = shd.shard(h, (wdim, "experts", None, None if ep_pure else "ff"))
+    ye = jnp.einsum("wecf,efd->wecd", h, p["we2"])
+    ye = shd.shard(ye, (wdim, "experts", None, None))
+
+    # back to token-major sharding for the combine (reverse all_to_all)
+    ye = shd.shard(ye, ("batch", None, None, None))
+    out = jax.vmap(lambda y, m: _combine_local(y, m, Tw, x.dtype))(ye, meta)
+    out = shd.shard(out.reshape(B, S, D), ("batch", "seq", None))
+    return out, aux

@@ -1,0 +1,186 @@
+"""RWKV-6 "Finch" block: data-dependent-decay linear attention (time-mix)
++ squared-ReLU channel-mix.  [arXiv:2404.05892]
+
+Time-mix recurrence per head (head size N):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t · (diag(u) k_t^T v_t + S_{t-1})
+
+with w_t = exp(-exp(ww_t)) a per-channel, DATA-DEPENDENT decay (the Finch
+contribution) produced by a low-rank MLP of the token-shifted input.
+
+TPU-native chunked evaluation: within a chunk of length c the pairwise
+decay factors exp(L_{t-1} - L_s) (s < t) have non-positive exponents, so
+the closed form is overflow-safe for ANY decay rate; across chunks a
+lax.scan carries S.  Per-chunk cost is two small matmul-like einsums —
+MXU work — instead of S sequential state updates.
+
+Decode is the recurrence verbatim: O(1) state per token, which is why
+rwkv6-7b is long_500k-eligible.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import sharding as shd
+
+LORA_DIM = 64
+
+
+def _dt(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def init_timemix(key, cfg):
+    D = cfg.d_model
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(D)
+    return {
+        "mu": jax.random.uniform(ks[0], (5, D), jnp.float32),   # r,k,v,g,w lerps
+        "w0": jnp.full((D,), -6.0, jnp.float32),                # slow decay init
+        "wA": jax.random.normal(ks[1], (D, LORA_DIM), jnp.float32) * s,
+        "wB": jax.random.normal(ks[2], (LORA_DIM, D), jnp.float32) * 0.01,
+        "u": jax.random.normal(ks[3], (D,), jnp.float32) * 0.5,
+        "wr": jax.random.normal(ks[4], (D, D), dt) * s,
+        "wk_r": jax.random.normal(ks[5], (D, D), dt) * s,
+        "wv_r": jax.random.normal(ks[6], (D, D), dt) * s,
+        "wg": jax.random.normal(ks[7], (D, D), dt) * s,
+        "wo_r": jax.random.normal(jax.random.fold_in(key, 9), (D, D), dt)
+                * (s / math.sqrt(2 * cfg.num_layers)),
+        "ln_x": jnp.ones((D,), jnp.float32),                    # per-head group norm
+    }
+
+
+def init_channelmix(key, cfg):
+    D, F = cfg.d_model, cfg.d_ff
+    dt = _dt(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu_c": jax.random.uniform(k1, (2, D), jnp.float32),    # k,r lerps
+        "ck": jax.random.normal(k1, (D, F), dt) / math.sqrt(D),
+        "cv": jax.random.normal(k2, (F, D), dt) / math.sqrt(F),
+        "cr": jax.random.normal(k3, (D, D), dt) / math.sqrt(D),
+    }
+
+
+def _shift(x, x_prev):
+    """Token shift: x_{t-1}, with x_prev (B, D) for the first position."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _mix_inputs(p, x, xx):
+    mu = p["mu"][:, None, None, :]                              # (5,1,1,D)
+    lerp = x[None] + (xx - x)[None] * mu                        # (5,B,S,D)
+    xr, xk, xv, xg, xw = lerp
+    r = jnp.einsum("bsd,de->bse", xr.astype(p["wr"].dtype), p["wr"])
+    k = jnp.einsum("bsd,de->bse", xk.astype(p["wr"].dtype), p["wk_r"])
+    v = jnp.einsum("bsd,de->bse", xv.astype(p["wr"].dtype), p["wv_r"])
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg.astype(p["wr"].dtype), p["wg"]))
+    ww = p["w0"] + jnp.tanh(xw.astype(jnp.float32) @ p["wA"]) @ p["wB"]
+    logw = -jnp.exp(ww)                                         # log decay <= 0
+    return r, k, v, g, logw
+
+
+def _group_norm(x, scale, H, eps=64e-5):
+    """Per-head layer norm over head channels (RWKV ln_x)."""
+    B, S, D = x.shape
+    xh = x.reshape(B, S, H, D // H).astype(jnp.float32)
+    mean = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mean) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(B, S, D) * scale).astype(x.dtype)
+
+
+def timemix(p, x, cfg, state=None, chunk: int = 32):
+    """Full-sequence time-mix.  x: (B,S,D) -> (out, (x_last, S_state))."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    N = D // H
+    x_prev = jnp.zeros((B, D), x.dtype) if state is None else state[0]
+    S0 = jnp.zeros((B, H, N, N), jnp.float32) if state is None else state[1]
+
+    xx = _shift(x, x_prev)
+    r, k, v, g, logw = _mix_inputs(p, x, xx)
+    pad = (-S) % chunk
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        r, k, v, logw = z(r), z(k), z(v), z(logw)
+    T = r.shape[1]
+    nc = T // chunk
+
+    def resh(a, dtype=None):
+        a = a.reshape(B, nc, chunk, H, N).transpose(1, 0, 2, 3, 4)
+        return a if dtype is None else a.astype(dtype)
+
+    rs, ks, vs = resh(r, jnp.float32), resh(k, jnp.float32), resh(v, jnp.float32)
+    lw = resh(logw)
+    u = p["u"].reshape(H, N)
+
+    @jax.checkpoint        # save one state per chunk, remat intra-chunk work
+    def body(S0, inp):
+        rc, kc, vc, lwc = inp                                   # (B,c,H,N)
+        L = jnp.cumsum(lwc, axis=1)                             # inclusive
+        Lx = L - lwc                                            # exclusive
+        # inter-chunk: r_t decayed to chunk start @ carried state
+        inter = jnp.einsum("bthn,bhnm->bthm", rc * jnp.exp(Lx), S0)
+        # intra-chunk: pairwise decay exp(Lx[t] - L[s]) <= 1 for s < t
+        dmat = jnp.exp(Lx[:, :, None] - L[:, None])             # (b,t,s,h,n)
+        att = jnp.einsum("bthn,bshn,btshn->bhts", rc, kc, dmat)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        att = jnp.where(tri[None, None], att, 0.0)
+        intra = jnp.einsum("bhts,bshm->bthm", att, vc)
+        diag = jnp.einsum("bthn,hn,bthn->bth", rc, u, kc)
+        intra = intra + diag[..., None] * vc
+        out = inter + intra                                     # (b,c,h,m)
+        # state: S_c = exp(L_c) * S0 + sum_s exp(L_c - L_s) k_s v_s
+        Lend = L[:, -1][:, None]                                # (b,1,h,n)
+        kdec = kc * jnp.exp(Lend - L)
+        S1 = jnp.exp(Lend[:, 0])[..., None] * S0 \
+            + jnp.einsum("bshn,bshm->bhnm", kdec, vc)
+        return S1, out
+
+    Sf, outs = jax.lax.scan(body, S0, (rs, ks, vs, lw))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, T, D)[:, :S]
+    out = _group_norm(out, p["ln_x"], H) * g[:, :S].astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", out.astype(p["wo_r"].dtype), p["wo_r"])
+    out = shd.shard(out, ("batch", "seq", None))
+    return out.astype(x.dtype), (x[:, -1], Sf)
+
+
+def timemix_decode(p, x1, cfg, state):
+    """One-token decode.  x1: (B,1,D); state: (x_prev (B,D), S (B,H,N,N))."""
+    B, _, D = x1.shape
+    H, N = cfg.num_heads, D // cfg.num_heads
+    x_prev, S0 = state
+    xx = x_prev[:, None]
+    r, k, v, g, logw = _mix_inputs(p, x1, xx)
+    rh = r.reshape(B, H, N).astype(jnp.float32)
+    kh = k.reshape(B, H, N).astype(jnp.float32)
+    vh = v.reshape(B, H, N).astype(jnp.float32)
+    w = jnp.exp(logw.reshape(B, H, N))
+    u = p["u"].reshape(H, N)
+    kv = kh[..., :, None] * vh[..., None, :]                    # (B,H,N,N)
+    o = jnp.einsum("bhn,bhnm->bhm", rh, u[None, :, :, None] * kv + S0)
+    S1 = w[..., None] * S0 + kv
+    out = o.reshape(B, 1, D)
+    out = _group_norm(out, p["ln_x"], H) * g.astype(out.dtype)
+    out = jnp.einsum("bsd,de->bse", out.astype(p["wo_r"].dtype), p["wo_r"])
+    return out.astype(x1.dtype), (x1[:, -1], S1)
+
+
+def channelmix(p, x, cfg, state=None):
+    """Squared-ReLU channel mix.  Returns (out, x_last)."""
+    B, S, D = x.shape
+    x_prev = jnp.zeros((B, D), x.dtype) if state is None else state
+    xx = _shift(x, x_prev)
+    mu = p["mu_c"][:, None, None, :]
+    xk, xr = (x[None] + (xx - x)[None] * mu)
+    kk = jnp.einsum("bsd,df->bsf", xk.astype(p["ck"].dtype), p["ck"])
+    kk = shd.shard(kk, ("batch", "seq", "ff"))
+    vv = jnp.einsum("bsf,fd->bsd", jnp.square(jax.nn.relu(kk)), p["cv"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr.astype(p["cr"].dtype), p["cr"]))
+    return (rr * vv).astype(x.dtype), x[:, -1]

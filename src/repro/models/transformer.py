@@ -1,0 +1,266 @@
+"""Decoder LM assembly from ArchConfig: dense / MoE / RWKV / hybrid / audio /
+VLM, with scan-over-blocks (MaxText-style stacked layer params — one traced
+block regardless of depth, so 72-layer Jamba compiles as fast as 2-layer).
+
+Three entry points:
+  forward(params, inputs, cfg)                  -> logits, aux, caches
+  decode_step(params, caches, inputs, lens, cfg)-> logits, new_caches
+  init_params(key, cfg) / init_cache(cfg, B, S) -> pytrees
+
+`inputs` is tokens (B,S) int32 for input_mode="tokens", or precomputed
+embeddings (B,S,D) for the audio/VLM stub frontends (assignment carve-out).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, mamba as mamba_lib, moe as moe_lib, rwkv as rwkv_lib
+from repro.train import sharding as shd
+
+
+def _dt(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block_position(key, cfg, mix: str, ffn: str):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = _dt(cfg)
+    p = {"norm1": jnp.ones((cfg.d_model,), dt),
+         "norm2": jnp.ones((cfg.d_model,), dt)}
+    if mix == "attn":
+        p["mixer"] = layers.init_attention(k1, cfg)
+    elif mix == "mamba":
+        p["mixer"] = mamba_lib.init_mamba(k1, cfg)
+    elif mix == "rwkv":
+        p["mixer"] = rwkv_lib.init_timemix(k1, cfg)
+    else:
+        raise ValueError(mix)
+    if ffn == "dense":
+        p["ffn"] = layers.init_mlp(k2, cfg)
+    elif ffn == "moe":
+        p["ffn"] = moe_lib.init_moe(k3, cfg)
+    elif ffn == "channelmix":
+        p["ffn"] = rwkv_lib.init_channelmix(k4, cfg)
+    else:
+        raise ValueError(ffn)
+    return p
+
+
+def init_params(key, cfg):
+    nb = cfg.num_blocks
+    dt = _dt(cfg)
+    keys = jax.random.split(key, 3)
+    params = {"final_norm": jnp.ones((cfg.d_model,), dt)}
+    if cfg.input_mode == "tokens":
+        params["embedding"] = (jax.random.normal(
+            keys[0], (cfg.vocab_size, cfg.d_model), dt) * 0.02)
+    params["lm_head"] = jax.random.normal(
+        keys[1], (cfg.d_model, cfg.vocab_size), dt) / math.sqrt(cfg.d_model)
+
+    blocks = {}
+    for i, (mix, ffn) in enumerate(cfg.block_pattern):
+        bkeys = jax.random.split(jax.random.fold_in(keys[2], i), nb)
+        blocks[f"pos{i}"] = jax.vmap(
+            lambda k: _init_block_position(k, cfg, mix, ffn))(bkeys)
+    params["blocks"] = blocks
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def active_param_count(params, cfg) -> int:
+    """Params touched per token (MoE experts scaled by top-k/E)."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        n = leaf.size
+        if name in ("we1", "we2", "we3") and cfg.num_experts:
+            n = n * cfg.num_experts_per_tok // cfg.num_experts
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_seq: int):
+    nb = cfg.num_blocks
+    dt = _dt(cfg)
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    N = D // H
+    cache = {}
+    for i, (mix, ffn) in enumerate(cfg.block_pattern):
+        c = {}
+        if mix == "attn":
+            c["k"] = jnp.zeros((nb, batch, max_seq, KV, hd), dt)
+            c["v"] = jnp.zeros((nb, batch, max_seq, KV, hd), dt)
+        elif mix == "mamba":
+            DI, NS, K = (mamba_lib.d_inner(cfg), cfg.mamba_d_state,
+                         cfg.mamba_conv)
+            c["conv"] = jnp.zeros((nb, batch, K - 1, DI), dt)
+            c["h"] = jnp.zeros((nb, batch, DI, NS), jnp.float32)
+        elif mix == "rwkv":
+            c["x_tm"] = jnp.zeros((nb, batch, D), dt)
+            c["S"] = jnp.zeros((nb, batch, H, N, N), jnp.float32)
+        if ffn == "channelmix":
+            c["x_cm"] = jnp.zeros((nb, batch, D), dt)
+        cache[f"pos{i}"] = c
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed(params, inputs, cfg, positions):
+    if cfg.input_mode == "tokens":
+        x = params["embedding"][inputs]          # (B,S,D) gather
+    else:
+        x = inputs.astype(_dt(cfg))              # precomputed embeddings (stub)
+    if cfg.pos_style == "sinusoidal":
+        x = x + layers.sinusoidal_emb(positions, cfg.d_model).astype(x.dtype)
+    return shd.shard(x, ("batch", "res_seq", None))
+
+
+def forward_hidden(params, inputs, cfg, positions=None,
+                   collect_cache: bool = False, unroll=False,
+                   remat: str = "none"):
+    """Backbone only: returns (final hidden (B,S,D), aux_loss, caches).
+
+    `unroll=True` unrolls the block scan (single-trip loop) so the dry-run's
+    `cost_analysis()` counts every layer — lax.scan bodies are otherwise
+    counted once regardless of trip count (see launch/roofline.py).
+
+    `remat` checkpoints EACH BLOCK (backward recomputes one block at a
+    time — peak activation memory is one block's transients plus the
+    per-block carries, not the whole depth).
+    """
+    B, S = inputs.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = _embed(params, inputs, cfg, positions)
+
+    def block_body(carry, bp):
+        x, aux = carry
+        caches = {}
+        for i, (mix, ffn) in enumerate(cfg.block_pattern):
+            pp = bp[f"pos{i}"]
+            h = layers.rms_norm(x, pp["norm1"], cfg.norm_eps)
+            if mix == "attn":
+                mo, kv = layers.attention(pp["mixer"], h, cfg, positions)
+                cch = {"k": kv[0], "v": kv[1]} if collect_cache else {}
+            elif mix == "mamba":
+                mo, st = mamba_lib.mamba(pp["mixer"], h, cfg)
+                cch = {"conv": st[0], "h": st[1]} if collect_cache else {}
+            else:  # rwkv
+                mo, st = rwkv_lib.timemix(pp["mixer"], h, cfg)
+                cch = {"x_tm": st[0], "S": st[1]} if collect_cache else {}
+            x = x + mo
+            h2 = layers.rms_norm(x, pp["norm2"], cfg.norm_eps)
+            if ffn == "dense":
+                f = layers.mlp(pp["ffn"], h2)
+            elif ffn == "moe":
+                f, al = moe_lib.moe_ffn(pp["ffn"], h2, cfg)
+                aux = aux + al
+            else:  # channelmix
+                f, xcm = rwkv_lib.channelmix(pp["ffn"], h2, cfg)
+                if collect_cache:
+                    cch["x_cm"] = xcm
+            x = x + f
+            x = shd.shard(x, ("batch", "res_seq", None))
+            caches[f"pos{i}"] = cch
+        return (x, aux), caches
+
+    body = block_body
+    if remat == "full":
+        body = jax.checkpoint(block_body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            block_body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    un = (cfg.num_blocks if unroll is True
+          else (unroll if isinstance(unroll, int) and unroll else 1))
+    (x, aux), caches = jax.lax.scan(
+        body, (x, jnp.float32(0.0)), params["blocks"], unroll=un)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux, (caches if collect_cache else None)
+
+
+def project_logits(params, x, cfg):
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return shd.shard(logits, ("batch", "seq", "vocab"))
+
+
+def forward(params, inputs, cfg, positions=None, collect_cache: bool = False,
+            unroll: bool = False):
+    """Returns (logits, aux_loss, caches_or_None)."""
+    x, aux, caches = forward_hidden(params, inputs, cfg, positions,
+                                    collect_cache, unroll)
+    return project_logits(params, x, cfg), aux, caches
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token, cache of max_seq)
+# ---------------------------------------------------------------------------
+
+def decode_step(params, caches, inputs, cache_len, cfg, unroll=False):
+    """inputs: tokens (B,1) or embeddings (B,1,D); cache_len: (B,) int32.
+
+    Returns (logits (B,1,V), new caches).
+    """
+    B = inputs.shape[0]
+    positions = cache_len[:, None]
+    x = _embed(params, inputs, cfg, positions)
+
+    def block_body(x, xs):
+        bp, bc = xs
+        new_c = {}
+        for i, (mix, ffn) in enumerate(cfg.block_pattern):
+            pp, cc = bp[f"pos{i}"], bc[f"pos{i}"]
+            nc = {}
+            h = layers.rms_norm(x, pp["norm1"], cfg.norm_eps)
+            if mix == "attn":
+                mo, kv = layers.attention_decode(pp["mixer"], h, cfg,
+                                                 (cc["k"], cc["v"]), cache_len)
+                nc["k"], nc["v"] = kv
+            elif mix == "mamba":
+                mo, st = mamba_lib.mamba_decode(pp["mixer"], h, cfg,
+                                                (cc["conv"], cc["h"]))
+                nc["conv"], nc["h"] = st
+            else:
+                mo, st = rwkv_lib.timemix_decode(pp["mixer"], h, cfg,
+                                                 (cc["x_tm"], cc["S"]))
+                nc["x_tm"], nc["S"] = st
+            x = x + mo
+            h2 = layers.rms_norm(x, pp["norm2"], cfg.norm_eps)
+            if ffn == "dense":
+                f = layers.mlp(pp["ffn"], h2)
+            elif ffn == "moe":
+                f, _ = moe_lib.moe_ffn(pp["ffn"], h2, cfg)
+            else:
+                xcm_prev = cc["x_cm"]
+                f, xcm = rwkv_lib.channelmix(pp["ffn"], h2, cfg, xcm_prev)
+                nc["x_cm"] = xcm
+            x = x + f
+            new_c[f"pos{i}"] = nc
+        return x, new_c
+
+    un = (cfg.num_blocks if unroll is True
+          else (unroll if isinstance(unroll, int) and unroll else 1))
+    x, new_caches = jax.lax.scan(block_body, x, (params["blocks"], caches),
+                                 unroll=un)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return logits, new_caches

@@ -1,0 +1,98 @@
+"""Serving: prefill + decode steps and a batched request engine.
+
+Two KV-cache sharding recipes (DESIGN.md §5):
+  * "batch"  — batch over "data", kv-heads over "model" (decode_32k, B=128)
+  * "seq"    — cache sequence over "data" (flash-decoding-style partial
+               softmax combine left to XLA SPMD), heads over "model"
+               (long_500k, B=1)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.train import sharding as shd
+
+
+def prefill_step(params, inputs, cfg, unroll: bool = False):
+    """Full-sequence forward; returns (last-position logits, layer caches).
+
+    Only the final position's logits are projected — materializing the full
+    (B, S, vocab) tensor at 32k prefill would be pure waste (the sampler
+    consumes one position).
+    """
+    x, _, caches = transformer.forward_hidden(params, inputs, cfg,
+                                              collect_cache=True,
+                                              unroll=unroll)
+    logits = transformer.project_logits(params, x[:, -1:], cfg)
+    return logits, caches
+
+
+def decode_step(params, caches, inputs, cache_len, cfg, unroll: bool = False):
+    """One new token against a max_seq cache (the dry-run decode workload)."""
+    return transformer.decode_step(params, caches, inputs, cache_len, cfg,
+                                   unroll=unroll)
+
+
+def greedy_sample(logits):
+    return jnp.argmax(logits[:, -1], axis=-1)
+
+
+@dataclasses.dataclass
+class BatchedServer:
+    """Minimal batched continuous-decode server for the examples.
+
+    Holds a fixed-size batch of slots; each slot has a cache position.  New
+    requests prefill into a free slot; every `step()` decodes one token for
+    all active slots.
+    """
+    cfg: object
+    params: object
+    max_seq: int
+    batch: int
+
+    def __post_init__(self):
+        self.caches = transformer.init_cache(self.cfg, self.batch, self.max_seq)
+        self.lens = jnp.zeros((self.batch,), jnp.int32)
+        self.active = [False] * self.batch
+        self.outputs: list[list[int]] = [[] for _ in range(self.batch)]
+        self._decode = jax.jit(
+            lambda p, c, t, l: transformer.decode_step(p, c, t, l, self.cfg))
+
+    def add_request(self, prompt_tokens) -> int:
+        slot = self.active.index(False)
+        toks = jnp.asarray(prompt_tokens, jnp.int32)
+        # sequential prefill through decode steps (simple, exercises the
+        # same path; bulk prefill_step is used by examples/serve_lm.py)
+        for t in toks:
+            tok = jnp.zeros((self.batch, 1), jnp.int32).at[slot, 0].set(t)
+            _, self.caches = self._decode(self.params, self.caches, tok, self.lens)
+            self.lens = self.lens.at[slot].add(1)
+        self.active[slot] = True
+        return slot
+
+    def step(self) -> dict[int, int]:
+        """Decode one token for every active slot; returns {slot: token}."""
+        last = jnp.asarray(
+            [self.outputs[i][-1] if self.outputs[i] else 0
+             for i in range(self.batch)], jnp.int32)[:, None]
+        logits, self.caches = self._decode(self.params, self.caches, last, self.lens)
+        nxt = jnp.argmax(logits[:, 0], axis=-1)
+        out = {}
+        for i in range(self.batch):
+            if self.active[i]:
+                tok = int(nxt[i])
+                self.outputs[i].append(tok)
+                self.lens = self.lens.at[i].add(1)
+                out[i] = tok
+        return out
+
+    def finish(self, slot: int) -> list[int]:
+        self.active[slot] = False
+        toks, self.outputs[slot] = self.outputs[slot], []
+        self.lens = self.lens.at[slot].set(0)
+        return toks

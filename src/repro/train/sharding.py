@@ -1,0 +1,214 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code annotates activations with LOGICAL axis names via `shard()`;
+the launcher installs a mesh + logical→mesh rules.  Off-mesh (CPU smoke
+tests) `shard()` is the identity, so the same model code runs everywhere.
+
+Default rules for the production mesh (DESIGN.md §5):
+
+  batch      -> ("pod", "data")   # data parallel (pod axis = DP across pods)
+  seq        -> None              # activations keep seq local ...
+  cache_seq  -> "data" only in the long-context decode recipe
+  heads / kv_heads / ff / experts / vocab -> "model" (tensor/expert parallel)
+  embed_fsdp -> "data"            # parameter FSDP shard dim
+
+A dim keeps its constraint only when divisible by the mesh axis size
+(musicgen's 24 heads on a 16-wide model axis simply stay unsharded — the
+flattened h·hd weight dim still shards evenly).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "res_seq": None,   # residual-stream seq (Megatron-SP shards it over "model")
+    "cache_seq": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "heads_flat": "model",
+    "ff": "model",
+    # expert parallelism over "data" (all_to_all routing), tensor parallelism
+    # WITHIN each expert over "model" — experts and ff must not share an axis
+    "experts": "data",
+    "expert_cap": None,
+    "vocab": "model",
+    "embed": None,
+    "embed_fsdp": "data",
+    "d_inner": "model",
+    "state": None,
+}
+
+# Decode recipes.  decode_32k: batch over "data", KV-cache seq over "model"
+# (kv_heads rarely divide the model axis — 8 kv heads on a 16-wide axis —
+# so the cache's SEQ dim carries the model-axis shard; attention becomes a
+# flash-decoding partial-softmax combine, inserted by SPMD).
+DECODE_OVERRIDES = {
+    "cache_seq": "model",
+    "kv_heads": None,        # cache_seq holds the model axis (no duplicates)
+}
+
+# long_500k: batch=1 frees the data axis — shard cache seq over BOTH axes.
+LONG_CONTEXT_OVERRIDES = {
+    "batch": None,
+    "cache_seq": ("data", "model"),
+    "kv_heads": None,
+    "experts": None,         # "data" carries cache_seq here
+}
+
+
+def _rules():
+    return getattr(_state, "rules", None)
+
+
+def _mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def make_rules(mesh: Mesh, overrides: Optional[dict] = None) -> dict:
+    """DEFAULT_RULES + overrides, restricted to axes the mesh actually has."""
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+
+    def filt(v):
+        if v is None:
+            return None
+        axes = (v,) if isinstance(v, str) else tuple(v)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+    return {k: filt(v) for k, v in rules.items()}
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Mesh, overrides: Optional[dict] = None):
+    rules = make_rules(mesh, overrides)
+    prev = (_mesh(), _rules())
+    _state.mesh, _state.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def logical_spec(axes: Sequence, mesh: Mesh, rules: dict,
+                 shape: Optional[Sequence[int]] = None) -> P:
+    """Map logical axis names to a PartitionSpec, dropping non-divisible dims."""
+    parts = []
+    for i, name in enumerate(axes):
+        if name is None:
+            parts.append(None)
+            continue
+        ax = rules.get(name)
+        if ax is None:
+            parts.append(None)
+            continue
+        if shape is not None and shape[i] % _axis_size(mesh, ax) != 0:
+            parts.append(None)
+            continue
+        parts.append(ax)
+    return P(*parts)
+
+
+def shard(x, axes: Sequence):
+    """Annotate activation x with logical axes (identity off-mesh)."""
+    mesh, rules = _mesh(), _rules()
+    if mesh is None:
+        return x
+    spec = logical_spec(axes, mesh, rules, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings (by name pattern)
+# ---------------------------------------------------------------------------
+
+PARAM_LOGICAL = {
+    # attention
+    "wq": ("embed_fsdp", "heads_flat"),
+    "wk": ("embed_fsdp", "heads_flat"),
+    "wv": ("embed_fsdp", "heads_flat"),
+    "wo": ("heads_flat", "embed_fsdp"),
+    "q_norm": (None,), "k_norm": (None,),
+    # mlp
+    "w1": ("embed_fsdp", "ff"), "w3": ("embed_fsdp", "ff"),
+    "w2": ("ff", "embed_fsdp"),
+    # moe: experts over "data" (EP), ff over "model" (TP within expert)
+    "router": ("embed_fsdp", None),
+    "we1": ("experts", None, "ff"), "we3": ("experts", None, "ff"),
+    "we2": ("experts", "ff", None),
+    # embeddings / head
+    "embedding": ("vocab", "embed_fsdp"),
+    "lm_head": ("embed_fsdp", "vocab"),
+    # rwkv
+    "wr": ("embed_fsdp", "d_inner"), "wk_r": ("embed_fsdp", "d_inner"),
+    "wv_r": ("embed_fsdp", "d_inner"), "wg": ("embed_fsdp", "d_inner"),
+    "wo_r": ("d_inner", "embed_fsdp"),
+    "ck": ("embed_fsdp", "ff"), "cv": ("ff", "embed_fsdp"), "cr": ("embed_fsdp", None),
+    # mamba
+    "in_proj": ("embed_fsdp", "d_inner"),
+    "out_proj": ("d_inner", "embed_fsdp"),
+    "x_proj": ("d_inner", None), "dt_proj": (None, "d_inner"),
+    "conv_w": (None, "d_inner"), "conv_b": ("d_inner",),
+    "a_log": ("d_inner", None), "dcoef": ("d_inner",),
+}
+
+
+# Pure-EP layout (experts carry the SAME axis as "ff" would): each device
+# owns whole experts, so neither expert matmul contracts a sharded dim — no
+# per-layer (tokens, d_model) all-reduce.  Expert weights FSDP over the
+# d_model dim instead.  Selected whenever rules map "experts" to the same
+# axis as "ff" (see moe.moe_ffn which drops its ff constraint then).
+PARAM_LOGICAL_EP = {
+    "we1": ("experts", "embed_fsdp", None),
+    "we3": ("experts", "embed_fsdp", None),
+    "we2": ("experts", None, "embed_fsdp"),
+}
+
+
+def pure_ep(rules: dict) -> bool:
+    e, f = rules.get("experts"), rules.get("ff")
+    return e is not None and e == f
+
+
+def param_spec_for(path: tuple, leaf_shape: tuple, mesh: Mesh, rules: dict) -> P:
+    """Spec for a param leaf from the last name component in its path."""
+    name = path[-1]
+    # layer-stacked params have a leading blocks dim
+    logical = (PARAM_LOGICAL_EP.get(name) if pure_ep(rules) else None) \
+        or PARAM_LOGICAL.get(name)
+    if logical is None:
+        return P()
+    extra = len(leaf_shape) - len(logical)
+    axes = (None,) * extra + tuple(logical)
+    return logical_spec(axes, mesh, rules, leaf_shape)
+
+
+def tree_param_specs(params, mesh: Mesh, rules: Optional[dict] = None):
+    rules = rules if rules is not None else make_rules(mesh)
+
+    def walk(path, leaf):
+        return NamedSharding(mesh, param_spec_for(
+            tuple(p.key for p in path), leaf.shape, mesh, rules))
+
+    return jax.tree_util.tree_map_with_path(walk, params)

@@ -1,0 +1,10 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see
+the real single CPU device; only launch/dryrun.py and the subprocess-based
+distributed tests force a multi-device host platform."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

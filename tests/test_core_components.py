@@ -1,0 +1,89 @@
+"""class_list / bagging / presort unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bagging, class_list, presort
+
+
+# ---------------------------------------------------------------------------
+# class list (paper §2.3)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 1000), st.integers(1, 60_000), st.integers(0, 2**31 - 1))
+def test_pack_roundtrip(n, num_leaves, seed):
+    rng = np.random.default_rng(seed)
+    bits = class_list.bits_needed(num_leaves)
+    ids = rng.integers(0, num_leaves + 1, n).astype(np.int32)
+    packed = class_list.pack(jnp.asarray(ids), bits)
+    un = class_list.unpack(packed, bits, n)
+    np.testing.assert_array_equal(np.asarray(un), ids)
+
+
+def test_bits_needed_matches_paper():
+    # ⌈log2(ℓ+1)⌉ — table of hand-checked values
+    assert class_list.bits_needed(1) == 1
+    assert class_list.bits_needed(3) == 2
+    assert class_list.bits_needed(4) == 3
+    assert class_list.bits_needed(7) == 3
+    assert class_list.bits_needed(8) == 4
+
+
+def test_storage_is_logarithmic():
+    n = 10_000
+    # far below 64 bits per sample for realistic leaf counts (paper §2.3)
+    assert class_list.storage_bits(n, 1023) == n * 10
+    words = class_list.packed_words(n, 10)
+    # no-straddle packing wastes at most (32 mod bits) bits per word (<7%)
+    assert words * 32 <= n * 10 * 32 / 30 + 64
+
+
+# ---------------------------------------------------------------------------
+# seeded bagging (paper §2.2)
+# ---------------------------------------------------------------------------
+
+def test_bagging_deterministic_across_workers():
+    """Two 'workers' derive the same bag from the seed — zero communication."""
+    a = bagging.bag_counts(42, 7, 1000, "poisson")
+    b = bagging.bag_counts(42, 7, 1000, "poisson")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = bagging.bag_counts(42, 8, 1000, "poisson")
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_bagging_modes():
+    n = 5000
+    w = np.asarray(bagging.bag_counts(0, 0, n, "poisson"))
+    assert 0.9 < w.mean() < 1.1
+    w2 = np.asarray(bagging.bag_counts(0, 0, n, "multinomial"))
+    assert w2.sum() == n                      # exactly n-out-of-n
+    w3 = np.asarray(bagging.bag_counts(0, 0, n, "none"))
+    assert (w3 == 1).all()
+
+
+def test_candidate_features_counts_and_usb():
+    key = jax.random.PRNGKey(0)
+    m, mp, L = 20, 5, 6
+    cand = np.asarray(bagging.candidate_features(key, 3, L, m, mp, usb=False))
+    assert cand.shape == (L, m)
+    assert (cand.sum(1) == mp).all()
+    usb = np.asarray(bagging.candidate_features(key, 3, L, m, mp, usb=True))
+    assert (usb == usb[0]).all()              # z = 1: same set for all leaves
+
+
+# ---------------------------------------------------------------------------
+# presort (paper §2.1)
+# ---------------------------------------------------------------------------
+
+def test_presort_sorted_and_stable(rng):
+    num = rng.normal(size=(500, 3)).astype(np.float32)
+    num[::7, 1] = 1.0                         # ties for stability check
+    si = np.asarray(presort.presort_columns(jnp.asarray(num)))
+    sv = np.asarray(presort.gather_sorted(jnp.asarray(num), jnp.asarray(si)))
+    for j in range(3):
+        assert (np.diff(sv[j]) >= 0).all()
+        ties = si[1][num[si[1], 1] == 1.0]
+        assert (np.diff(ties) > 0).all()      # stable: original order kept

@@ -1,0 +1,140 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps (assignment (c))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import splits
+from repro.kernels import cat_hist, ops, ref
+
+
+def _mk(seed, n, m, L, C, dup=False):
+    rng = np.random.default_rng(seed)
+    num = rng.normal(size=(n, m)).astype(np.float32)
+    if dup:
+        num = np.round(num)                   # heavy ties
+    y = rng.integers(0, C, n).astype(np.int32)
+    w = rng.integers(0, 3, n).astype(np.float32)
+    leaf = rng.integers(0, L + 1, n).astype(np.int32)
+    si = np.argsort(num.T, axis=-1, kind="stable").astype(np.int32)
+    sv = np.take_along_axis(num.T, si, -1)
+    cand = np.ones((m, L + 1), bool)
+    cand[:, 0] = False
+    return sv, si, leaf, w, y, cand
+
+
+def _oracle(sv, si, leaf, w, y, cand, L, C, task="classification",
+            impurity="gini", min_records=1.0):
+    leaf_g, w_g = leaf[si], w[si]
+    y_g = y[si].astype(np.float32)
+
+    def tot(lf, ww, yy):
+        st = splits.row_stats(jnp.asarray(yy), jnp.asarray(ww), C, task)
+        st = jnp.where(((ww > 0) & (lf > 0))[:, None], st, 0.0)
+        return jax.ops.segment_sum(st, lf, num_segments=L + 1)
+
+    totals = jax.vmap(tot)(jnp.asarray(leaf_g), jnp.asarray(w_g),
+                           jnp.asarray(y_g))
+    return ref.split_scan_ref(
+        jnp.asarray(sv), jnp.asarray(leaf_g), jnp.asarray(w_g),
+        jnp.asarray(y_g), jnp.asarray(cand, np.float32), totals,
+        L1=L + 1, s_dim=C if task == "classification" else 3,
+        impurity=impurity, task=task, min_records=min_records)
+
+
+SWEEP = [
+    # (n, m, L, C, bn, dup)
+    (256, 2, 1, 2, 64, False),
+    (500, 3, 5, 3, 128, False),
+    (1000, 4, 7, 2, 256, True),
+    (777, 2, 3, 4, 128, True),      # n not multiple of bn -> padding path
+    (512, 1, 15, 2, 512, False),    # single block
+]
+
+
+@pytest.mark.parametrize("n,m,L,C,bn,dup", SWEEP)
+def test_split_scan_kernel_sweep(n, m, L, C, bn, dup):
+    sv, si, leaf, w, y, cand = _mk(n + m, n, m, L, C, dup)
+    g_k, t_k = ops.split_scan_supersplit(
+        jnp.asarray(sv), jnp.asarray(si), jnp.asarray(leaf), jnp.asarray(w),
+        jnp.asarray(y), jnp.asarray(cand), L, bn=bn)
+    g_r, t_r = _oracle(sv, si, leaf, w, y, cand, L, C)
+    gk, gr = np.asarray(g_k), np.asarray(g_r)
+    fin = np.isfinite(gr)
+    assert (np.isfinite(gk) == fin).all()
+    np.testing.assert_allclose(gk[fin], gr[fin], atol=2e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(t_k)[fin], np.asarray(t_r)[fin],
+                               atol=1e-4)
+
+
+def test_split_scan_kernel_regression_task():
+    n, m, L = 512, 2, 3
+    rng = np.random.default_rng(0)
+    num = rng.normal(size=(n, m)).astype(np.float32)
+    y = (num[:, 0] * 2 + rng.normal(size=n) * 0.1).astype(np.float32)
+    w = np.ones(n, np.float32)
+    leaf = rng.integers(1, L + 1, n).astype(np.int32)
+    si = np.argsort(num.T, axis=-1, kind="stable").astype(np.int32)
+    sv = np.take_along_axis(num.T, si, -1)
+    cand = np.ones((m, L + 1), bool); cand[:, 0] = False
+    g_k, t_k = ops.split_scan_supersplit(
+        jnp.asarray(sv), jnp.asarray(si), jnp.asarray(leaf), jnp.asarray(w),
+        jnp.asarray(y), jnp.asarray(cand), L, impurity="variance",
+        task="regression", bn=128)
+    g_r, t_r = _oracle(sv, si, leaf, w, y, cand, L, 2, task="regression",
+                       impurity="variance")
+    fin = np.isfinite(np.asarray(g_r))
+    np.testing.assert_allclose(np.asarray(g_k)[fin], np.asarray(g_r)[fin],
+                               rtol=1e-3, atol=1e-2)
+
+
+@pytest.mark.parametrize("entropy", ["gini", "entropy"])
+def test_split_scan_kernel_impurities(entropy):
+    sv, si, leaf, w, y, cand = _mk(11, 384, 2, 3, 2)
+    g_k, _ = ops.split_scan_supersplit(
+        jnp.asarray(sv), jnp.asarray(si), jnp.asarray(leaf), jnp.asarray(w),
+        jnp.asarray(y), jnp.asarray(cand), 3, impurity=entropy, bn=128)
+    g_r, _ = _oracle(sv, si, leaf, w, y, cand, 3, 2, impurity=entropy)
+    fin = np.isfinite(np.asarray(g_r))
+    np.testing.assert_allclose(np.asarray(g_k)[fin], np.asarray(g_r)[fin],
+                               atol=2e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("V,bv,bn", [(6, 6, 128), (16, 4, 64), (32, 8, 256)])
+def test_cat_hist_kernel_sweep(V, bv, bn):
+    n, m, L, C = 512, 3, 4, 3
+    rng = np.random.default_rng(V)
+    x = rng.integers(0, V, size=(m, n)).astype(np.int32)
+    leaf = rng.integers(0, L + 1, n).astype(np.int32)
+    w = rng.integers(0, 3, n).astype(np.float32)
+    y = rng.integers(0, C, n).astype(np.int32)
+    tbl_k = cat_hist.cat_hist_pallas(
+        jnp.asarray(x), jnp.asarray(np.broadcast_to(leaf, (m, n))),
+        jnp.asarray(np.broadcast_to(w, (m, n))),
+        jnp.asarray(np.broadcast_to(y.astype(np.float32), (m, n))),
+        L1=L + 1, V=V, s_dim=C, bv=bv, bn=bn, interpret=True)
+    tbl_r = ref.cat_hist_ref(
+        jnp.asarray(x), jnp.asarray(np.broadcast_to(leaf, (m, n))),
+        jnp.asarray(np.broadcast_to(w, (m, n))),
+        jnp.asarray(np.broadcast_to(y.astype(np.float32), (m, n))),
+        L1=L + 1, V=V, s_dim=C)
+    np.testing.assert_allclose(np.asarray(tbl_k), np.asarray(tbl_r), atol=1e-4)
+
+
+def test_kernel_backend_in_tree_builder_matches():
+    """TreeParams(backend='kernel') builds the same forest as 'scan'."""
+    from repro.core import tree as tree_lib
+    from repro.core.dataset import from_numpy
+    from repro.core.forest import RandomForest
+    rng = np.random.default_rng(2)
+    n = 600
+    num = rng.normal(size=(n, 3)).astype(np.float32)
+    yb = (num[:, 0] * num[:, 1] > 0).astype(np.int32)
+    ds = from_numpy(num, None, yb)
+    a = RandomForest(tree_lib.TreeParams(max_depth=3, backend="kernel"),
+                     num_trees=1, seed=3).fit(ds)
+    b = RandomForest(tree_lib.TreeParams(max_depth=3, backend="scan"),
+                     num_trees=1, seed=3).fit(ds)
+    np.testing.assert_array_equal(a.trees[0].feature, b.trees[0].feature)
+    np.testing.assert_allclose(a.trees[0].threshold, b.trees[0].threshold,
+                               atol=1e-4)

@@ -1,0 +1,213 @@
+"""Model-layer correctness: blocked attention, RWKV chunked-vs-recurrent,
+Mamba scan-vs-decode, MoE dispatch, prefill/decode consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.models import layers, mamba as mamba_lib, moe as moe_lib, \
+    rwkv as rwkv_lib, transformer
+from repro.serve import engine
+
+
+def _f32(cfg):
+    return dataclasses.replace(cfg, dtype="float32")
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def test_blocked_attention_matches_naive():
+    cfg = _f32(get_arch("llama3-8b").reduced())
+    key = jax.random.PRNGKey(0)
+    p = layers.init_attention(key, cfg)
+    B, S = 2, 128
+    x = jax.random.normal(key, (B, S, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    o_full, _ = layers.attention(p, x, cfg, pos, q_block=S)
+    o_blk, _ = layers.attention(p, x, cfg, pos, q_block=16)
+    np.testing.assert_allclose(np.asarray(o_full), np.asarray(o_blk),
+                               atol=1e-4)
+
+
+def test_sliding_window_attention_blocks_far_tokens():
+    cfg = dataclasses.replace(_f32(get_arch("llava-next-mistral-7b").reduced()),
+                              sliding_window=8)
+    key = jax.random.PRNGKey(0)
+    p = layers.init_attention(key, cfg)
+    B, S = 1, 64
+    x = jax.random.normal(key, (B, S, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    o1, _ = layers.attention(p, x, cfg, pos, q_block=16)
+    # perturbing a token > window away must NOT change position t's output
+    x2 = x.at[:, 0].set(x[:, 0] + 100.0)
+    o2, _ = layers.attention(p, x2, cfg, pos, q_block=16)
+    np.testing.assert_allclose(np.asarray(o1[:, 20:]), np.asarray(o2[:, 20:]),
+                               atol=1e-4)
+    assert not np.allclose(np.asarray(o1[:, 2]), np.asarray(o2[:, 2]),
+                           atol=1e-4)
+
+
+def test_rope_styles():
+    pos = jnp.arange(8)[None]
+    sin, cos = layers.rope_angles(pos, 16, 1e4)
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, 16))
+    full = layers.apply_rope(x, sin, cos, "full")
+    half = layers.apply_rope(x, sin, cos, "half")
+    # half (GLM 2d-RoPE) leaves the upper half of head dims untouched
+    np.testing.assert_allclose(np.asarray(half[..., 8:]),
+                               np.asarray(x[..., 8:]))
+    assert not np.allclose(np.asarray(full[..., 8:]), np.asarray(x[..., 8:]))
+    # position 0 is identity
+    np.testing.assert_allclose(np.asarray(full[:, 0]), np.asarray(x[:, 0]),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6: chunked parallel == step-by-step recurrence
+# ---------------------------------------------------------------------------
+
+def test_rwkv_chunked_equals_recurrent():
+    cfg = _f32(get_arch("rwkv6-7b").reduced())
+    key = jax.random.PRNGKey(0)
+    p = rwkv_lib.init_timemix(key, cfg)
+    B, S = 2, 48
+    x = jax.random.normal(key, (B, S, cfg.d_model)) * 0.5
+    out_par, (xl, Sf) = rwkv_lib.timemix(p, x, cfg, chunk=16)
+    # recurrent reference
+    state = (jnp.zeros((B, cfg.d_model)),
+             jnp.zeros((B, cfg.num_heads,
+                        cfg.d_model // cfg.num_heads,
+                        cfg.d_model // cfg.num_heads)))
+    outs = []
+    for t in range(S):
+        o, state = rwkv_lib.timemix_decode(p, x[:, t:t + 1], cfg, state)
+        outs.append(o)
+    out_rec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_par), np.asarray(out_rec),
+                               atol=2e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(Sf), np.asarray(state[1]),
+                               atol=2e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Mamba: full scan == token-by-token decode
+# ---------------------------------------------------------------------------
+
+def test_mamba_scan_equals_decode():
+    cfg = _f32(get_arch("jamba-1.5-large-398b").reduced())
+    key = jax.random.PRNGKey(0)
+    p = mamba_lib.init_mamba(key, cfg)
+    B, S = 2, 24
+    x = jax.random.normal(key, (B, S, cfg.d_model)) * 0.5
+    out_full, _ = mamba_lib.mamba(p, x, cfg)
+    K = cfg.mamba_conv
+    state = (jnp.zeros((B, K - 1, mamba_lib.d_inner(cfg))),
+             jnp.zeros((B, mamba_lib.d_inner(cfg), cfg.mamba_d_state)))
+    outs = []
+    for t in range(S):
+        o, state = mamba_lib.mamba_decode(p, x[:, t:t + 1], cfg, state)
+        outs.append(o)
+    out_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_full), np.asarray(out_dec),
+                               atol=2e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def test_moe_matches_dense_reference():
+    """With capacity_factor >> 1 no token drops: sort-based dispatch must
+    equal the brute-force 'every expert on every token' weighted sum."""
+    cfg = dataclasses.replace(_f32(get_arch("olmoe-1b-7b").reduced()),
+                              capacity_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    p = moe_lib.init_moe(key, cfg)
+    B, S = 2, 16
+    x = jax.random.normal(key, (B, S, cfg.d_model)) * 0.5
+    out, aux = moe_lib.moe_ffn(p, x, cfg)
+
+    xf = x.reshape(-1, cfg.d_model)
+    logits = xf @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gate, eidx = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    gate = gate / gate.sum(-1, keepdims=True)
+    h1 = jnp.einsum("td,edf->tef", xf, p["we1"])
+    h3 = jnp.einsum("td,edf->tef", xf, p["we3"])
+    ye = jnp.einsum("tef,efd->ted", jax.nn.silu(h1) * h3, p["we2"])
+    ref = jnp.zeros_like(xf)
+    for k in range(cfg.num_experts_per_tok):
+        sel = jnp.take_along_axis(ye, eidx[:, k][:, None, None], 1)[:, 0]
+        ref = ref + sel * gate[:, k][:, None]
+    np.testing.assert_allclose(np.asarray(out.reshape(-1, cfg.d_model)),
+                               np.asarray(ref), atol=2e-3, rtol=1e-3)
+    assert float(aux) >= 1.0 - 1e-3          # E[aux] == 1 at uniform routing
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = dataclasses.replace(_f32(get_arch("olmoe-1b-7b").reduced()),
+                              capacity_factor=0.25)
+    key = jax.random.PRNGKey(0)
+    p = moe_lib.init_moe(key, cfg)
+    x = jax.random.normal(key, (2, 16, cfg.d_model))
+    out, _ = moe_lib.moe_ffn(p, x, cfg)
+    assert not bool(jnp.isnan(out).any())    # drops are zeros, not NaNs
+
+
+# ---------------------------------------------------------------------------
+# prefill -> decode consistency (the serving contract), per mixer family
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "rwkv6-7b",
+                                  "jamba-1.5-large-398b", "olmoe-1b-7b"])
+def test_decode_matches_full_forward(arch):
+    cfg = _f32(get_arch(arch).reduced())
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)  # no drops
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(key, cfg)
+    B, S = 2, 12
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    full_logits, _, _ = transformer.forward(params, toks, cfg)
+
+    caches = transformer.init_cache(cfg, B, S)
+    lens = jnp.zeros((B,), jnp.int32)
+    outs = []
+    for t in range(S):
+        lg, caches = transformer.decode_step(params, caches, toks[:, t:t + 1],
+                                             lens, cfg)
+        lens = lens + 1
+        outs.append(lg)
+    dec_logits = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full_logits),
+                               np.asarray(dec_logits), atol=5e-3, rtol=1e-2)
+
+
+def test_prefill_then_decode_continues(arch="granite-3-2b"):
+    cfg = _f32(get_arch(arch).reduced())
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(key, cfg)
+    B, S = 1, 10
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    # teacher: full forward over S+1 tokens, logits at position S
+    full_logits, _, _ = transformer.forward(params, toks, cfg)
+
+    # prefill S tokens, decode token S
+    logits_p, caches = engine.prefill_step(params, toks[:, :S], cfg)
+    # prefill caches have length S; extend to S+1 for the decode write
+    caches = jax.tree_util.tree_map(
+        lambda c: jnp.concatenate(
+            [c, jnp.zeros_like(c[:, :, :1])], axis=2)
+        if c.ndim >= 3 and c.shape[2] == S else c, caches)
+    lg, _ = transformer.decode_step(params, caches, toks[:, S:S + 1],
+                                    jnp.full((B,), S, jnp.int32), cfg)
+    np.testing.assert_allclose(np.asarray(full_logits[:, S]),
+                               np.asarray(lg[:, 0]), atol=5e-3, rtol=1e-2)
+    # prefill's last-position logits match the full forward at S-1
+    np.testing.assert_allclose(np.asarray(full_logits[:, S - 1]),
+                               np.asarray(logits_p[:, 0]), atol=5e-3, rtol=1e-2)

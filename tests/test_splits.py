@@ -1,0 +1,192 @@
+"""Supersplit engines: exactness against a brute-force oracle + backend
+agreement + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import splits
+
+
+# ---------------------------------------------------------------------------
+# Brute-force oracle (pure numpy, one leaf at a time)
+# ---------------------------------------------------------------------------
+
+def brute_best_numeric(vals, y, w, num_classes, impurity="gini",
+                       min_records=1.0):
+    """Enumerate every midpoint between consecutive distinct in-bag values."""
+    order = np.argsort(vals, kind="stable")
+    vals, y, w = vals[order], y[order], w[order]
+    inbag = w > 0
+    if inbag.sum() < 2:
+        return -np.inf, 0.0
+
+    def imp(h):
+        n = h.sum()
+        if n <= 0:
+            return 0.0
+        if impurity == "gini":
+            return n - (h ** 2).sum() / n
+        p = h / n
+        return -n * (p[p > 0] * np.log(p[p > 0])).sum()
+
+    hist = lambda idx: np.bincount(y[idx], weights=w[idx],
+                                   minlength=num_classes).astype(np.float64)
+    total = hist(inbag)
+    best_g, best_t = -np.inf, 0.0
+    iv = vals[inbag]
+    for i in range(1, len(iv)):
+        if iv[i] <= iv[i - 1]:
+            continue
+        tau = (iv[i] + iv[i - 1]) / 2
+        left_sel = inbag & (vals <= tau)
+        right_sel = inbag & (vals > tau)
+        hl, hr = hist(left_sel), hist(right_sel)
+        if hl.sum() < min_records or hr.sum() < min_records:
+            continue
+        g = imp(total) - imp(hl) - imp(hr)
+        if g > best_g + 1e-9:
+            best_g, best_t = g, tau
+    return best_g, best_t
+
+
+def _prep(rng, n, L, C):
+    vals = np.sort(rng.normal(size=n)).astype(np.float32)
+    leaf = rng.integers(0, L + 1, n).astype(np.int32)
+    w = rng.integers(0, 3, n).astype(np.float32)
+    y = rng.integers(0, C, n).astype(np.int32)
+    stats = splits.row_stats(jnp.asarray(y), jnp.asarray(w), C, "classification")
+    cand = np.ones(L + 1, bool)
+    cand[0] = False
+    return vals, leaf, w, y, stats, jnp.asarray(cand)
+
+
+@pytest.mark.parametrize("backend", ["scan", "segment"])
+def test_exact_vs_bruteforce(backend, rng):
+    n, L, C = 300, 4, 3
+    vals, leaf, w, y, stats, cand = _prep(rng, n, L, C)
+    fn = splits.NUMERIC_BACKENDS[backend]
+    g, t = fn(jnp.asarray(vals), jnp.asarray(leaf), jnp.asarray(w), stats,
+              cand, L)
+    g, t = np.asarray(g), np.asarray(t)
+    for h in range(1, L + 1):
+        sel = leaf == h
+        bg, bt = brute_best_numeric(vals[sel], y[sel], w[sel], C)
+        if np.isfinite(bg):
+            assert g[h] == pytest.approx(bg, rel=1e-4, abs=1e-4), f"leaf {h}"
+            assert t[h] == pytest.approx(bt, rel=1e-4, abs=1e-4), f"leaf {h}"
+        else:
+            assert not np.isfinite(g[h])
+
+
+def test_backends_identical(rng):
+    for trial in range(5):
+        n, L, C = 257, 6, 2
+        vals, leaf, w, y, stats, cand = _prep(rng, n, L, C)
+        g1, t1 = splits.best_numeric_split_scan(
+            jnp.asarray(vals), jnp.asarray(leaf), jnp.asarray(w), stats, cand, L)
+        g2, t2 = splits.best_numeric_split_segment(
+            jnp.asarray(vals), jnp.asarray(leaf), jnp.asarray(w), stats, cand, L)
+        fin = np.isfinite(np.asarray(g1))
+        assert (fin == np.isfinite(np.asarray(g2))).all()
+        np.testing.assert_allclose(np.asarray(g1)[fin], np.asarray(g2)[fin],
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(t1)[fin], np.asarray(t2)[fin],
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_categorical_binary_exact(rng):
+    """For binary classification the Breiman ordering gives the best subset
+    among ALL 2^(V-1) subsets — verify by exhaustive enumeration."""
+    n, L, V = 400, 2, 5
+    x = rng.integers(0, V, n).astype(np.int32)
+    leaf = rng.integers(0, L + 1, n).astype(np.int32)
+    w = rng.integers(0, 3, n).astype(np.float32)
+    y = rng.integers(0, 2, n).astype(np.int32)
+    stats = splits.row_stats(jnp.asarray(y), jnp.asarray(w), 2, "classification")
+    cand = jnp.asarray([False] + [True] * L)
+    g, mask = splits.best_categorical_split(
+        jnp.asarray(x), jnp.asarray(leaf), jnp.asarray(w), stats, cand, L, V)
+    g = np.asarray(g)
+
+    def imp(h):
+        nn = h.sum()
+        return nn - (h ** 2).sum() / nn if nn > 0 else 0.0
+
+    for h in range(1, L + 1):
+        sel = (leaf == h) & (w > 0)
+        best = -np.inf
+        total = np.bincount(y[sel], weights=w[sel], minlength=2)
+        for subset in range(1, 2 ** V - 1):
+            in_s = np.array([(subset >> v) & 1 for v in range(V)], bool)
+            lsel = sel & in_s[x]
+            hl = np.bincount(y[lsel], weights=w[lsel], minlength=2)
+            hr = total - hl
+            if hl.sum() < 1 or hr.sum() < 1:
+                continue
+            best = max(best, imp(total) - imp(hl) - imp(hr))
+        if np.isfinite(best):
+            assert g[h] == pytest.approx(best, rel=1e-4, abs=1e-4), f"leaf {h}"
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 4), st.integers(16, 120))
+def test_property_backends_agree(seed, C, n):
+    rng = np.random.default_rng(seed)
+    L = int(rng.integers(1, 5))
+    vals = np.sort(rng.normal(size=n)).astype(np.float32)
+    # duplicated values exercise the tie handling
+    vals = np.round(vals * 2) / 2
+    leaf = rng.integers(0, L + 1, n).astype(np.int32)
+    w = rng.integers(0, 3, n).astype(np.float32)
+    y = rng.integers(0, C, n).astype(np.int32)
+    stats = splits.row_stats(jnp.asarray(y), jnp.asarray(w), C, "classification")
+    cand = jnp.asarray([False] + [True] * L)
+    g1, t1 = splits.best_numeric_split_scan(
+        jnp.asarray(vals), jnp.asarray(leaf), jnp.asarray(w), stats, cand, L)
+    g2, t2 = splits.best_numeric_split_segment(
+        jnp.asarray(vals), jnp.asarray(leaf), jnp.asarray(w), stats, cand, L)
+    fin = np.isfinite(np.asarray(g1))
+    assert (fin == np.isfinite(np.asarray(g2))).all()
+    np.testing.assert_allclose(np.asarray(g1)[fin], np.asarray(g2)[fin],
+                               rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_gain_nonnegative_and_split_separates(seed):
+    """Invariants: reported gains are >= 0; thresholds lie strictly between
+    two observed in-bag values of their leaf."""
+    rng = np.random.default_rng(seed)
+    n, L = 200, 3
+    vals = np.sort(rng.normal(size=n)).astype(np.float32)
+    leaf = rng.integers(0, L + 1, n).astype(np.int32)
+    w = rng.integers(0, 2, n).astype(np.float32)
+    y = rng.integers(0, 2, n).astype(np.int32)
+    stats = splits.row_stats(jnp.asarray(y), jnp.asarray(w), 2, "classification")
+    cand = jnp.asarray([False] + [True] * L)
+    g, t = splits.best_numeric_split_segment(
+        jnp.asarray(vals), jnp.asarray(leaf), jnp.asarray(w), stats, cand, L)
+    g, t = np.asarray(g), np.asarray(t)
+    for h in range(1, L + 1):
+        if not np.isfinite(g[h]):
+            continue
+        assert g[h] >= -1e-5
+        iv = vals[(leaf == h) & (w > 0)]
+        assert iv.min() < t[h] < iv.max()
+
+
+def test_regression_variance_gain(rng):
+    n, L = 300, 2
+    vals = np.sort(rng.normal(size=n)).astype(np.float32)
+    leaf = rng.integers(1, L + 1, n).astype(np.int32)
+    w = np.ones(n, np.float32)
+    y = (vals * 3 + rng.normal(size=n) * 0.1).astype(np.float32)
+    stats = splits.row_stats(jnp.asarray(y), jnp.asarray(w), 2, "regression")
+    cand = jnp.asarray([False] + [True] * L)
+    g, t = splits.best_numeric_split_segment(
+        jnp.asarray(vals), jnp.asarray(leaf), jnp.asarray(w), stats, cand, L,
+        impurity="variance", task="regression")
+    assert np.isfinite(np.asarray(g)[1:]).all()
+    assert (np.asarray(g)[1:] > 0).all()

@@ -1,0 +1,73 @@
+"""End-to-end behaviour tests for the paper's system (replaces placeholder).
+
+Validates the paper's headline empirical claims at test scale:
+  * DRF learns the §4 synthetic families where rote learning fails (Fig. 1)
+  * more training data -> better AUC (Fig. 1 / §5)
+  * more trees -> better AUC (Fig. 1)
+  * depth-by-depth metrics behave like Fig. 3 (leaves grow, densities < 1)
+"""
+import numpy as np
+import pytest
+
+from repro.core import tree as tree_lib
+from repro.core.forest import RandomForest
+from repro.data.synthetic import make_tabular, train_test_split
+
+
+def _auc_on(family, n, trees=3, depth=10, seed=0, uv=6):
+    ds = make_tabular(family, n, num_informative=4, num_useless=uv, seed=seed)
+    tr, te = train_test_split(ds)
+    rf = RandomForest(tree_lib.TreeParams(max_depth=depth, min_records=1),
+                      num_trees=trees, seed=seed).fit(tr)
+    return rf.auc(te)
+
+
+def rote_auc(family, n, seed=0, uv=6):
+    """Paper's baseline: label correctly iff the exact row was seen."""
+    # continuous features: test rows are (a.s.) never in the training set
+    return 0.5
+
+
+def test_beats_rote_learning_with_useless_variables():
+    # 2-dim xor + 8 useless vars (paper's 4-dim instances need ~1e8 rows —
+    # Fig. 2 runs them at 3e8; at test scale the 2-dim family carries the
+    # same claim: rote learning is stuck at 0.5, DRF is not)
+    ds = make_tabular("xor", 5000, num_informative=2, num_useless=8, seed=0)
+    tr, te = train_test_split(ds)
+    rf = RandomForest(tree_lib.TreeParams(max_depth=12, min_records=1),
+                      num_trees=5, seed=0).fit(tr)
+    auc = rf.auc(te)
+    assert auc > 0.75                      # rote learning = 0.5 (paper Fig. 1)
+    assert auc > rote_auc("xor", 5000) + 0.2
+
+
+def test_more_data_improves_auc():
+    small = _auc_on("majority", 500)
+    big = _auc_on("majority", 6000)
+    assert big > small + 0.02, (small, big)
+
+
+def test_more_trees_improve_auc():
+    one = _auc_on("majority", 2500, trees=1)
+    ten = _auc_on("majority", 2500, trees=8)
+    assert ten > one, (one, ten)
+
+
+def test_depth_metrics_like_fig3():
+    ds = make_tabular("majority", 3000, num_informative=5, num_useless=3,
+                      seed=4)
+    rf = RandomForest(tree_lib.TreeParams(max_depth=10, min_records=2),
+                      num_trees=1, seed=0).fit(ds, collect_stats=True)
+    tr = rf.trees[0]
+    stats = rf.level_stats[0]
+    leaves_per_level = [s.open_leaves for s in stats]
+    # leaves grow in the early levels (they may CLOSE later — min_records)
+    assert leaves_per_level[:4] == sorted(leaves_per_level[:4])
+    assert max(leaves_per_level) >= 8
+    assert 0 < tr.node_density() <= 1.0
+    assert 0 <= tr.sample_density() <= 1.0
+
+
+def test_needle_imbalanced_family_runs():
+    auc = _auc_on("needle", 4000, trees=5, depth=12)
+    assert np.isfinite(auc)               # highly imbalanced — noisy (paper)

@@ -1,0 +1,87 @@
+"""Training loop + serving engine + checkpoint behaviour."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt_io
+from repro.configs.base import get_arch
+from repro.data.synthetic import TokenStream
+from repro.models import transformer
+from repro.optim import adamw
+from repro.serve import engine
+from repro.train import step as tsl
+
+
+def test_chunked_ce_equals_full():
+    key = jax.random.PRNGKey(0)
+    B, S, D, V = 2, 32, 16, 50
+    x = jax.random.normal(key, (B, S, D))
+    w = jax.random.normal(key, (D, V)) * 0.1
+    labels = jax.random.randint(key, (B, S), 0, V)
+    full = tsl.cross_entropy(jnp.einsum("bsd,dv->bsv", x, w), labels, 1e-4)
+    for nc in (1, 2, 8):
+        chunked = tsl.chunked_cross_entropy(x, w, labels, 1e-4, nc)
+        assert float(chunked) == pytest.approx(float(full), rel=1e-5)
+
+
+def test_loss_decreases_quick():
+    cfg = get_arch("qwen3-0.6b").reduced()
+    cfg = dataclasses.replace(cfg, num_layers=2, d_model=128, d_ff=256,
+                              vocab_size=128, head_dim=32)
+    tcfg = tsl.TrainConfig(
+        optimizer=adamw.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60),
+        ce_chunks=2)
+    state = tsl.init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    step = jax.jit(tsl.make_train_step(cfg, tcfg), donate_argnums=0)
+    stream = TokenStream(cfg.vocab_size, 32, 8, seed=1)
+    losses = []
+    for i, raw in zip(range(60), stream):
+        batch = {"inputs": jnp.asarray(raw["inputs"]),
+                 "labels": jnp.asarray(raw["labels"])}
+        state, m = step(state, batch)
+        losses.append(float(m["ce"]))
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.2, losses[::10]
+
+
+def test_adamw_schedule_shape():
+    cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                            min_lr_ratio=0.1)
+    lrs = [float(adamw.schedule(cfg, s)) for s in (0, 5, 10, 50, 100)]
+    assert lrs[0] == 0
+    assert lrs[1] == pytest.approx(5e-4)
+    assert lrs[2] == pytest.approx(1e-3)
+    assert lrs[3] < lrs[2]
+    assert lrs[4] == pytest.approx(1e-4, rel=1e-2)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_arch("granite-3-2b").reduced()
+    tcfg = tsl.TrainConfig()
+    state = tsl.init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    path = os.path.join(tmp_path, "ckpt.npz")
+    ckpt_io.save(path, state)
+    like = jax.tree_util.tree_map(jnp.zeros_like, state)
+    restored = ckpt_io.restore(path, like)
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_batched_server_decodes():
+    cfg = dataclasses.replace(get_arch("qwen3-0.6b").reduced(),
+                              num_layers=2, d_model=64, d_ff=128,
+                              vocab_size=64, head_dim=16)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    srv = engine.BatchedServer(cfg=cfg, params=params, max_seq=32, batch=2)
+    s0 = srv.add_request([1, 2, 3])
+    s1 = srv.add_request([4, 5])
+    for _ in range(4):
+        out = srv.step()
+        assert set(out) == {s0, s1}
+        assert all(0 <= t < cfg.vocab_size for t in out.values())
+    toks = srv.finish(s0)
+    assert len(toks) == 4

@@ -1,0 +1,189 @@
+"""Tree builder (Alg. 2) + RandomForest + GBT behaviour tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tree as tree_lib
+from repro.core.dataset import from_numpy
+from repro.core.forest import RandomForest
+from repro.core.gbt import GBTModel, GBTParams
+from repro.data.synthetic import make_tabular, train_test_split
+
+
+@pytest.fixture(scope="module")
+def small_ds():
+    rng = np.random.default_rng(3)
+    n = 1200
+    num = rng.normal(size=(n, 4)).astype(np.float32)
+    cat = rng.integers(0, 5, size=(n, 2)).astype(np.int32)
+    y = ((num[:, 0] > 0) ^ (cat[:, 0] >= 3)).astype(np.int32)
+    return from_numpy(num, cat, y)
+
+
+def test_backends_build_identical_trees(small_ds):
+    trees = {}
+    for backend in ("scan", "segment", "kernel"):
+        rf = RandomForest(tree_lib.TreeParams(max_depth=4, backend=backend),
+                          num_trees=2, seed=5).fit(small_ds)
+        trees[backend] = rf.trees
+    for backend in ("segment", "kernel"):
+        for ta, tb in zip(trees["scan"], trees[backend]):
+            assert ta.num_nodes == tb.num_nodes
+            np.testing.assert_array_equal(ta.feature, tb.feature)
+            np.testing.assert_allclose(ta.threshold, tb.threshold, atol=1e-4)
+            np.testing.assert_array_equal(ta.children, tb.children)
+
+
+def test_forest_learns(small_ds):
+    rf = RandomForest(tree_lib.TreeParams(max_depth=8, min_records=2),
+                      num_trees=5, seed=0).fit(small_ds)
+    acc = float((np.asarray(rf.predict(small_ds.num, small_ds.cat))
+                 == np.asarray(small_ds.labels)).mean())
+    assert acc > 0.8
+    assert rf.auc(small_ds) > 0.9
+    oob = rf.oob_score(small_ds)
+    assert oob > 0.7
+
+
+def test_min_records_and_depth_respected(small_ds):
+    p = tree_lib.TreeParams(max_depth=3, min_records=50)
+    rf = RandomForest(p, num_trees=1, seed=0).fit(small_ds)
+    tr = rf.trees[0]
+    assert tr.max_depth_reached <= 3
+    leaves = tr.feature < 0
+    # every SPLIT must leave >= min_records on both sides
+    internal = ~leaves
+    for node in np.where(internal)[0]:
+        l, r = tr.children[node]
+        assert tr.n_node[l] >= p.min_records - 1e-6
+        assert tr.n_node[r] >= p.min_records - 1e-6
+
+
+def test_deterministic_given_seed(small_ds):
+    p = tree_lib.TreeParams(max_depth=4)
+    a = RandomForest(p, num_trees=2, seed=9).fit(small_ds)
+    b = RandomForest(p, num_trees=2, seed=9).fit(small_ds)
+    for ta, tb in zip(a.trees, b.trees):
+        np.testing.assert_array_equal(ta.feature, tb.feature)
+        np.testing.assert_allclose(ta.threshold, tb.threshold)
+
+
+def test_usb_variant_trains(small_ds):
+    rf = RandomForest(tree_lib.TreeParams(max_depth=4, usb=True),
+                      num_trees=2, seed=0).fit(small_ds)
+    acc = float((np.asarray(rf.predict(small_ds.num, small_ds.cat))
+                 == np.asarray(small_ds.labels)).mean())
+    assert acc > 0.8
+
+
+def test_feature_importance_finds_informative():
+    ds = make_tabular("linear", 2000, num_informative=3, num_useless=5, seed=1)
+    rf = RandomForest(tree_lib.TreeParams(max_depth=6), num_trees=5,
+                      seed=0).fit(ds)
+    imp = rf.feature_importances()
+    # the 3 informative features should dominate the 5 useless ones
+    assert imp[:3].sum() > 0.7
+
+
+def test_pure_categorical_dataset():
+    rng = np.random.default_rng(0)
+    n = 800
+    cat = rng.integers(0, 6, size=(n, 3)).astype(np.int32)
+    y = ((cat[:, 0] % 2) ^ (cat[:, 1] >= 3)).astype(np.int32)
+    ds = from_numpy(None, cat, y)
+    rf = RandomForest(tree_lib.TreeParams(max_depth=6), num_trees=3,
+                      seed=0).fit(ds)
+    acc = float((np.asarray(rf.predict(ds.num, ds.cat)) == y).mean())
+    assert acc > 0.9
+
+
+def test_level_stats_match_paper_costs(small_ds):
+    """The recorded per-level counters must follow Table 1's DRF row:
+    one bit per (in-bag, open-leaf) sample per level; class list bits
+    n·⌈log2(ℓ+1)⌉."""
+    rf = RandomForest(tree_lib.TreeParams(max_depth=5), num_trees=1,
+                      seed=0).fit(small_ds, collect_stats=True)
+    stats = rf.level_stats[0]
+    assert len(stats) >= 2
+    n = small_ds.n
+    for s in stats:
+        assert s.network_bits_bitmap <= 3 * n       # ~n (poisson weights)
+        bits = int(np.ceil(np.log2(s.open_leaves + 1)))
+        assert s.class_list_bits == n * bits
+
+
+def test_gbt_regression_and_logistic():
+    rng = np.random.default_rng(1)
+    n = 900
+    num = rng.normal(size=(n, 4)).astype(np.float32)
+    y = (2 * num[:, 0] + num[:, 1] ** 2).astype(np.float32)
+    ds = from_numpy(num, None, y, task="regression")
+    gbt = GBTModel(GBTParams(num_rounds=12, max_depth=3,
+                             learning_rate=0.3)).fit(ds)
+    rmse = float(np.sqrt(((gbt.predict(ds.num, ds.cat) - y) ** 2).mean()))
+    assert rmse < 0.5 * y.std()
+
+    yb = (num[:, 0] + num[:, 2] > 0).astype(np.int32)
+    ds2 = from_numpy(num, None, yb)
+    g2 = GBTModel(GBTParams(num_rounds=12, max_depth=3, learning_rate=0.3,
+                            loss="logistic")).fit(ds2)
+    acc = float((g2.predict(ds2.num, ds2.cat) == yb).mean())
+    assert acc > 0.9
+
+
+def test_generalization_on_holdout():
+    ds = make_tabular("majority", 3000, num_informative=5, num_useless=3,
+                      seed=2)
+    tr, te = train_test_split(ds)
+    rf = RandomForest(tree_lib.TreeParams(max_depth=8, min_records=2),
+                      num_trees=5, seed=0).fit(tr)
+    acc = float((np.asarray(rf.predict(te.num, te.cat))
+                 == np.asarray(te.labels)).mean())
+    assert acc > 0.8
+
+
+def test_sprint_pruning_switch_exact():
+    """Paper §3: the Sprint-style record-pruning mode must not change the
+    model (it only compacts rows already in closed leaves)."""
+    rng = np.random.default_rng(0)
+    n = 2000
+    num = rng.normal(size=(n, 4)).astype(np.float32)
+    y = (num[:, 0] > 1.2).astype(np.int32)   # skewed: leaves close early
+    ds = from_numpy(num, None, y)
+    a = RandomForest(tree_lib.TreeParams(max_depth=8, min_records=50),
+                     num_trees=2, seed=3).fit(ds)
+    b = RandomForest(tree_lib.TreeParams(max_depth=8, min_records=50,
+                                         prune_closed_frac=0.3),
+                     num_trees=2, seed=3).fit(ds)
+    for ta, tb in zip(a.trees, b.trees):
+        assert ta.num_nodes == tb.num_nodes
+        np.testing.assert_array_equal(ta.feature, tb.feature)
+        np.testing.assert_allclose(ta.threshold, tb.threshold, atol=1e-4)
+
+
+def test_distributed_importance_decomposition():
+    """Paper goal (5): feature importance decomposes over splitters —
+    per-column-range partials sum to the global MDI."""
+    from repro.core import importance
+    ds = make_tabular("linear", 1500, num_informative=3, num_useless=3,
+                      seed=6)
+    rf = RandomForest(tree_lib.TreeParams(max_depth=5), num_trees=3,
+                      seed=0).fit(ds)
+    m = ds.m
+    total = np.zeros(m)
+    for lo in range(0, m, 2):                      # 3 "splitters", 2 cols each
+        total += importance.mdi_partial(rf.trees, m, lo, lo + 2)
+    ref = importance.mdi_importance(rf.trees, m)
+    np.testing.assert_allclose(total / max(total.sum(), 1e-12), ref,
+                               atol=1e-6)
+
+
+def test_permutation_importance_agrees_with_mdi():
+    from repro.core import importance
+    ds = make_tabular("linear", 2000, num_informative=2, num_useless=4,
+                      seed=7)
+    rf = RandomForest(tree_lib.TreeParams(max_depth=6), num_trees=5,
+                      seed=0).fit(ds)
+    perm = importance.permutation_importance(rf, ds, seed=0)
+    # informative features must outrank the useless ones in both measures
+    assert perm[:2].sum() > perm[2:].sum()
