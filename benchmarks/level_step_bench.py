@@ -1,0 +1,93 @@
+"""Fused level step vs the reference builder (the fig2 workload, per level).
+
+Measures wall time per depth level for `tree.build_tree` (one fused jitted
+program per level) against `tree.build_tree_reference` (the pre-fusion
+builder) on the fig2 time-scaling workload, and writes the result to
+``BENCH_level_step.json`` so the perf trajectory stays machine-readable
+across PRs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import emit
+from repro.core import presort, tree as tree_lib
+from repro.data.synthetic import make_tabular
+
+OUT_PATH = os.environ.get("BENCH_LEVEL_STEP_JSON", "BENCH_level_step.json")
+
+
+def _time_build(ds, sv, si, params, builder):
+    """One warm build (compile) + best-of-2 timed builds of ONE tree.
+
+    Times the level loop itself: presorting is per-forest (amortized over
+    every tree), so it is prepared once outside.  Returns (seconds, levels).
+    """
+    kw = dict(num=ds.num, cat=ds.cat, labels=ds.labels, sorted_vals=sv,
+              sorted_idx=si, arities=ds.arities, num_classes=ds.num_classes,
+              params=params, seed=0)
+    builder(tree_idx=0, **kw)                                   # warm jits
+    best = float("inf")
+    for rep in (1, 2):
+        t0 = time.perf_counter()
+        tree, _ = builder(tree_idx=rep, **kw)
+        best = min(best, time.perf_counter() - t0)
+    levels = int(tree.max_depth_reached) + 1
+    return best, levels
+
+
+def run(full: bool = False):
+    n = 100_000 if not full else 250_000
+    depth = 8
+    ds = make_tabular("majority", n, num_informative=4, num_useless=4, seed=7)
+    params = tree_lib.TreeParams(max_depth=depth, min_records=1)
+    si = presort.presort_columns(ds.num)
+    sv = presort.gather_sorted(ds.num, si)
+
+    ref_s, ref_levels = _time_build(ds, sv, si, params,
+                                    tree_lib.build_tree_reference)
+    fused_s, fused_levels = _time_build(ds, sv, si, params,
+                                        tree_lib.build_tree)
+
+    def per_level_us(total_s, levels):
+        return total_s / max(levels, 1) * 1e6
+
+    ref_us = per_level_us(ref_s, ref_levels)
+    fused_us = per_level_us(fused_s, fused_levels)
+    speedup = ref_us / fused_us if fused_us else float("nan")
+
+    emit(f"level_step/reference/n{n}", ref_us,
+         f"levels={ref_levels};s_total={ref_s:.3f}")
+    emit(f"level_step/fused/n{n}", fused_us,
+         f"levels={fused_levels};s_total={fused_s:.3f}")
+    emit("level_step/speedup", 0.0,
+         f"x{speedup:.2f};target>=2.0:"
+         f"{'OK' if speedup >= 2.0 else 'MISS'}")
+
+    report = {
+        "workload": {"family": "majority", "n": n, "m_num": 8,
+                     "max_depth": depth, "backend": params.backend,
+                     "device": "cpu"},
+        "reference": {"total_s": round(ref_s, 4), "levels": ref_levels,
+                      "per_level_us": round(ref_us, 1),
+                      "rows_per_s": round(n * ref_levels / ref_s, 1)},
+        "fused": {"total_s": round(fused_s, 4), "levels": fused_levels,
+                  "per_level_us": round(fused_us, 1),
+                  "rows_per_s": round(n * fused_levels / fused_s, 1)},
+        "speedup": round(speedup, 3),
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    emit("level_step/json", 0.0, OUT_PATH)
+    return report
+
+
+def main() -> None:
+    run()
+
+
+if __name__ == "__main__":
+    main()

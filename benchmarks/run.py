@@ -13,7 +13,7 @@ import time
 def main() -> None:
     from benchmarks import (fig1_auc_scaling, fig2_time_scaling,
                             fig3_depth_metrics, kernel_bench,
-                            table1_complexity)
+                            level_step_bench, table1_complexity)
     only = sys.argv[1] if len(sys.argv) > 1 else None
     benches = {
         "table1": table1_complexity.run,
@@ -21,6 +21,8 @@ def main() -> None:
         "fig3": fig3_depth_metrics.run,
         "kernel": kernel_bench.run,
         "fig1": fig1_auc_scaling.run,
+        # writes BENCH_level_step.json (fused vs reference per-level time)
+        "level": level_step_bench.run,
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():

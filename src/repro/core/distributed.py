@@ -39,8 +39,12 @@ from repro.core import splits
 
 
 def _shmap(f, mesh, in_specs, out_specs):
-    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                     check_vma=False)
+    try:    # jax>=0.6 spells the replication check "check_vma"
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+    except TypeError:  # jax 0.4.x spells it "check_rep"
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
 
 
 # ---------------------------------------------------------------------------

@@ -1,4 +1,4 @@
-"""Random Forest manager (paper §2.5).
+"""Random Forest manager (paper §2.5) + stacked forest inference.
 
 "To train a Random Forest, the manager queries in parallel the tree
 builders.  This query contains the index of the requested tree (the tree
@@ -9,6 +9,12 @@ The manager here is the host loop: each tree is trained by `tree.build_tree`
 columns).  Trees are independent — on a real cluster DRF trains them in
 parallel on replicated splitters; we expose `predict`, OOB scoring and
 distributed feature importance on top.
+
+Inference is batched over the whole forest: `fit` packs every tree into one
+set of padded flat arrays (`PackedForest`) and `predict_proba` is a single
+jitted vmap-over-trees descent — one device program for a 100-tree forest
+instead of a per-tree Python loop with a retrace per tree (the per-tree
+`iters` used to be a distinct static argument for every tree).
 """
 from __future__ import annotations
 
@@ -23,6 +29,100 @@ from repro.core import bagging, presort, tree as tree_lib
 from repro.core.dataset import TabularDataset
 
 
+# ---------------------------------------------------------------------------
+# Stacked forest inference
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PackedForest:
+    """All trees of a forest in one set of padded flat arrays.
+
+    Nodes beyond a tree's `num_nodes` are padding leaves (feature −1,
+    value 0); they are unreachable because the descent starts at node 0 and
+    leaves are absorbing.
+    """
+    feature: jnp.ndarray     # (T, N) int32; -1 = leaf
+    threshold: jnp.ndarray   # (T, N) float32
+    is_cat: jnp.ndarray      # (T, N) bool
+    cat_mask: jnp.ndarray    # (T, N, V) bool
+    children: jnp.ndarray    # (T, N, 2) int32
+    value: jnp.ndarray       # (T, N, C) float32
+    m_num: int
+    iters: int               # max depth over trees + 1 (static descent bound)
+
+    @property
+    def num_trees(self) -> int:
+        return int(self.feature.shape[0])
+
+
+def pack_trees(trees: list) -> PackedForest:
+    """Pad each tree's flat arrays to the forest maximum and stack."""
+    assert trees
+    T = len(trees)
+    N = max(t.num_nodes for t in trees)
+    V = max(t.cat_mask.shape[1] for t in trees)
+    C = max(t.value.shape[1] for t in trees)
+    feature = np.full((T, N), -1, np.int32)
+    threshold = np.zeros((T, N), np.float32)
+    is_cat = np.zeros((T, N), bool)
+    cat_mask = np.zeros((T, N, V), bool)
+    children = np.full((T, N, 2), -1, np.int32)
+    value = np.zeros((T, N, C), np.float32)
+    for t, tr in enumerate(trees):
+        k = tr.num_nodes
+        feature[t, :k] = tr.feature
+        threshold[t, :k] = tr.threshold
+        is_cat[t, :k] = tr.is_cat
+        cat_mask[t, :k, :tr.cat_mask.shape[1]] = tr.cat_mask
+        children[t, :k] = tr.children
+        value[t, :k, :tr.value.shape[1]] = tr.value
+    iters = max(int(t.depth.max()) for t in trees) + 1
+    return PackedForest(
+        feature=jnp.asarray(feature), threshold=jnp.asarray(threshold),
+        is_cat=jnp.asarray(is_cat), cat_mask=jnp.asarray(cat_mask),
+        children=jnp.asarray(children), value=jnp.asarray(value),
+        m_num=trees[0].m_num, iters=iters)
+
+
+# trace counter: tests assert predict_proba compiles ONCE for a whole
+# forest (no per-tree retraces) — the body below runs only at trace time
+_PREDICT_TRACES = [0]
+
+
+def _forest_predict_impl(feature, threshold, is_cat, cat_mask, children,
+                         value, num, cat, m_num, iters, reduce_mean):
+    _PREDICT_TRACES[0] += 1
+    B = num.shape[0] if num.size else cat.shape[0]
+
+    def one_tree(f, th, ic, cm, ch, val):
+        node = jnp.zeros((B,), jnp.int32)
+
+        def body(_, node):
+            ff = f[node]
+            leaf = ff < 0
+            jn = jnp.clip(ff, 0, max(m_num - 1, 0))
+            jc = jnp.clip(ff - m_num, 0, max(cat.shape[1] - 1, 0))
+            xnum = (jnp.take_along_axis(num, jn[:, None], 1)[:, 0]
+                    if num.size else jnp.zeros((B,), jnp.float32))
+            xcat = (jnp.take_along_axis(cat, jc[:, None], 1)[:, 0]
+                    if cat.size else jnp.zeros((B,), jnp.int32))
+            go_left = jnp.where(ic[node], cm[node, xcat], xnum <= th[node])
+            nxt = jnp.where(go_left, ch[node, 0], ch[node, 1])
+            return jnp.where(leaf, node, nxt)
+
+        node = jax.lax.fori_loop(0, iters, body, node)
+        return val[node]                                      # (B, C)
+
+    preds = jax.vmap(one_tree)(feature, threshold, is_cat, cat_mask,
+                               children, value)               # (T, B, C)
+    return preds.mean(axis=0) if reduce_mean else preds
+
+
+_forest_predict = jax.jit(
+    _forest_predict_impl,
+    static_argnames=("m_num", "iters", "reduce_mean"))
+
+
 @dataclasses.dataclass
 class RandomForest:
     params: tree_lib.TreeParams
@@ -34,6 +134,7 @@ class RandomForest:
     num_classes: int = 2
     m: int = 0
     m_num: int = 0
+    packed: Optional[PackedForest] = None
 
     # ------------------------------------------------------------------
     def fit(self, ds: TabularDataset, collect_stats: bool = False,
@@ -58,16 +159,38 @@ class RandomForest:
                 collect_stats=collect_stats, supersplit_fn=supersplit_fn)
             self.trees.append(tr)
             self.level_stats.append(stats)
+        self.packed = pack_trees(self.trees)      # stacked inference arrays
         return self
 
     # ------------------------------------------------------------------
-    def predict_proba(self, num, cat, up_to: Optional[int] = None) -> jnp.ndarray:
+    def _packed_forest(self, up_to: Optional[int] = None) -> PackedForest:
         assert self.trees, "fit first"
-        acc = None
-        for tr in self.trees[:up_to]:
-            p = tr.predict_raw(jnp.asarray(num, jnp.float32), jnp.asarray(cat, jnp.int32))
-            acc = p if acc is None else acc + p
-        return acc / len(self.trees[:up_to])
+        if self.packed is None or self.packed.num_trees != len(self.trees):
+            self.packed = pack_trees(self.trees)
+        pk = self.packed
+        if up_to is not None and up_to < pk.num_trees:
+            pk = dataclasses.replace(
+                pk, feature=pk.feature[:up_to], threshold=pk.threshold[:up_to],
+                is_cat=pk.is_cat[:up_to], cat_mask=pk.cat_mask[:up_to],
+                children=pk.children[:up_to], value=pk.value[:up_to])
+        return pk
+
+    def predict_proba(self, num, cat, up_to: Optional[int] = None) -> jnp.ndarray:
+        """Forest-averaged distributions in ONE jitted call (vmap over the
+        packed trees — no per-tree Python loop, no per-tree retrace)."""
+        pk = self._packed_forest(up_to)
+        return _forest_predict(
+            pk.feature, pk.threshold, pk.is_cat, pk.cat_mask, pk.children,
+            pk.value, jnp.asarray(num, jnp.float32), jnp.asarray(cat, jnp.int32),
+            pk.m_num, pk.iters, True)
+
+    def predict_proba_per_tree(self, num, cat) -> jnp.ndarray:
+        """(T, B, C) per-tree predictions, one jitted call (OOB, analysis)."""
+        pk = self._packed_forest()
+        return _forest_predict(
+            pk.feature, pk.threshold, pk.is_cat, pk.cat_mask, pk.children,
+            pk.value, jnp.asarray(num, jnp.float32), jnp.asarray(cat, jnp.int32),
+            pk.m_num, pk.iters, False)
 
     def predict(self, num, cat) -> jnp.ndarray:
         p = self.predict_proba(num, cat)
@@ -81,14 +204,21 @@ class RandomForest:
         n = ds.n
         correct = np.zeros(n)
         counted = np.zeros(n)
-        for t, tr in enumerate(self.trees):
-            w = np.asarray(bagging.bag_counts(self.seed, t, n, self.params.bagging))
-            oob = w == 0
+        oob_masks = [
+            np.asarray(bagging.bag_counts(self.seed, t, n,
+                                          self.params.bagging)) == 0
+            for t in range(len(self.trees))]
+        if not any(m.any() for m in oob_masks):   # e.g. bagging == "none"
+            return float("nan")
+        # one device program for all trees; argmax on device so only the
+        # (T, B) class ids cross to the host
+        preds = np.asarray(jnp.argmax(
+            self.predict_proba_per_tree(ds.num, ds.cat), axis=-1))
+        labels = np.asarray(ds.labels)
+        for t, oob in enumerate(oob_masks):
             if not oob.any():
                 continue
-            p = np.asarray(tr.predict_raw(ds.num, ds.cat))
-            pred = p.argmax(-1)
-            correct[oob] += pred[oob] == np.asarray(ds.labels)[oob]
+            correct[oob] += preds[t][oob] == labels[oob]
             counted[oob] += 1
         mask = counted > 0
         return float((correct[mask] / counted[mask]).mean()) if mask.any() else float("nan")

@@ -158,6 +158,18 @@ def _segmented_cummax_exclusive(x: jnp.ndarray, is_start: jnp.ndarray) -> jnp.nd
     return jnp.where(is_start, NEG, exc)
 
 
+def _segmented_cummax_exclusive_2d(x: jnp.ndarray,
+                                   is_start: jnp.ndarray) -> jnp.ndarray:
+    """`_segmented_cummax_exclusive` batched along axis 0 (scan on axis 1)."""
+    m = x.shape[0]
+    def combine(a, b):
+        (va, ba), (vb, bb) = a, b
+        return jnp.where(bb, vb, jnp.maximum(va, vb)), ba | bb
+    inc, _ = jax.lax.associative_scan(combine, (x, is_start), axis=1)
+    exc = jnp.concatenate([jnp.full((m, 1), NEG), inc[:, :-1]], axis=1)
+    return jnp.where(is_start, NEG, exc)
+
+
 @functools.partial(jax.jit, static_argnames=("num_leaves", "impurity", "task"))
 def best_numeric_split_segment(
     vals_sorted: jnp.ndarray,
@@ -223,39 +235,143 @@ NUMERIC_BACKENDS = {
 
 
 # ---------------------------------------------------------------------------
+# Numerical — leaf-ordered backend (the fused level step's fast path)
+# ---------------------------------------------------------------------------
+#
+# Identical semantics to `best_numeric_split_segment`, but the caller hands
+# rows already in (leaf, value)-sorted order, so the per-level counting sort
+# (the dominant per-column cost at scale) disappears.  The fused tree
+# builder maintains that order incrementally across levels: children of a
+# leaf are stable partitions of the parent's contiguous block, an O(n)
+# segmented-cumsum update instead of an O(n log n) sort (see tree.py).
+
+def _segmented_first_max(gain: jnp.ndarray, tau: jnp.ndarray,
+                         is_start: jnp.ndarray):
+    """Inclusive segmented (max, argfirst) scan along the last axis: at each
+    row, the best gain seen so far in its segment and the threshold of the
+    FIRST row achieving it (scan-order tie-breaking, matching Alg. 1)."""
+    def combine(a, b):
+        (ga, ta, sa), (gb, tb, sb) = a, b
+        take_b = sb | (gb > jnp.where(sb, NEG, ga))
+        return (jnp.where(take_b, gb, ga), jnp.where(take_b, tb, ta), sa | sb)
+    bs, bt, _ = jax.lax.associative_scan(combine, (gain, tau, is_start),
+                                         axis=-1)
+    return bs, bt
+
+
+def best_numeric_split_leaf_ordered(
+    vals: jnp.ndarray,           # (m, n) float32, (leaf, value)-sorted rows
+    lf_pos: jnp.ndarray,         # (n,) int32 leaf id PER POSITION (shared)
+    inbag: jnp.ndarray,          # (m, n) bool: w > 0 & leaf open, per column
+    stats: jnp.ndarray,          # (m, n, S) row stats in leaf order
+    cand_leaf: jnp.ndarray,      # (m, L+1) bool
+    num_leaves: int,
+    impurity: str = "gini",
+    task: str = "classification",
+    min_records: float = 1.0,
+    totals: jnp.ndarray | None = None,     # (L+1, S) shared per-leaf totals
+    row_counts: jnp.ndarray | None = None,  # (L+1,) rows per leaf (all rows)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact all-columns supersplit over pre-leaf-ordered rows.
+
+    Natively batched over the column axis (no vmap, no per-column sort, no
+    scatter-add in the hot path).  Because every column holds the same
+    multiset of rows counting-sorted by the same leaf ids, the block
+    structure is column-independent: `lf_pos` is the ONE leaf-of-position
+    array shared by all columns, and block starts/ends derive from the one
+    `row_counts` histogram.
+
+    When `totals` is None the per-leaf totals are reduced from each
+    column's own row order (bit-matching the `segment` backend); passing
+    the level's shared totals saves the reduction — exact for
+    classification, where stats are integer-valued bag counts.  Returns
+    (best_gain, best_threshold), each (m, L+1).
+    """
+    m, n = vals.shape
+    L1 = num_leaves + 1
+    cnt = count_fn(task)
+    if row_counts is None:
+        row_counts = jax.ops.segment_sum(
+            jnp.ones((n,), jnp.int32), lf_pos, num_segments=L1)
+
+    contrib = jnp.where(inbag[..., None], stats, 0.0)
+    cum = jnp.cumsum(contrib, axis=1)
+    cum_excl = cum - contrib
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), lf_pos[1:] != lf_pos[:-1]])   # (n,) shared
+    start_idx = jax.lax.cummax(jnp.where(is_start, jnp.arange(n), -1))
+    left = cum_excl - cum_excl[:, start_idx, :]              # excl prefix
+    if totals is None:
+        flat = jnp.arange(m)[:, None] * L1 + lf_pos[None]
+        totals_cols = jax.ops.segment_sum(
+            contrib.reshape(m * n, -1), flat.reshape(-1),
+            num_segments=m * L1, indices_are_sorted=True).reshape(m, L1, -1)
+        parent = totals_cols[:, lf_pos, :]                   # (m, n, S)
+    else:
+        parent = totals[lf_pos][None]                        # shared (1,n,S)
+    right = parent - left
+
+    is_start_b = jnp.broadcast_to(is_start[None], (m, n))
+    pv = _segmented_cummax_exclusive_2d(
+        jnp.where(inbag, vals, NEG), is_start_b)
+    ok = inbag & cand_leaf[:, lf_pos] & (vals > pv) & jnp.isfinite(pv) \
+        & (cnt(left) >= min_records) & (cnt(right) >= min_records)
+    # parent impurity is recomputed from left + right per row, NOT from the
+    # gathered per-leaf totals: the values agree, but evaluating the
+    # impurity at a different array shape can flip the last ulp of
+    # transcendentals (entropy's log), and the reference backend computes
+    # it exactly this way
+    gain = jnp.where(ok, split_gain(left, right, impurity), NEG)
+    tau = (vals + pv) * 0.5
+
+    # Materialize gain/tau before the log-depth scan: without the barrier
+    # XLA re-fuses (and so re-computes) the whole producer chain into every
+    # scan level — a ~6x blowup measured on CPU.
+    gain, tau = jax.lax.optimization_barrier((gain, tau))
+    bs, bt = _segmented_first_max(gain, tau, is_start_b)
+    # each leaf's best sits at its block's LAST row; block ends follow from
+    # the (column-independent) leaf histogram — a gather, not a scatter
+    end_pos = jnp.maximum(jnp.cumsum(row_counts) - 1, 0)     # (L+1,)
+    occupied = row_counts > 0
+    best_s = jnp.where(occupied[None, :], bs[:, end_pos], NEG)
+    best_t = jnp.where(occupied[None, :], bt[:, end_pos], 0.0)
+    return best_s, best_t
+
+
+# ---------------------------------------------------------------------------
 # Categorical — count tables + Breiman ordering (paper §2.4, SM)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("num_leaves", "arity", "impurity", "task"))
-def best_categorical_split(
+def categorical_count_table(
     x_col: jnp.ndarray,          # (n,) int32 category values
     leaf_of: jnp.ndarray,        # (n,) int32 in [0, L]
     w: jnp.ndarray,              # (n,) float32
     stats: jnp.ndarray,          # (n, S)
-    cand_leaf: jnp.ndarray,      # (L+1,) bool
     num_leaves: int,
     arity: int,
-    impurity: str = "gini",
-    task: str = "classification",
-    min_records: float = 1.0,
-) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Best subset split x ∈ C per open leaf, one pass.
-
-    Builds the (leaf × category × stat) count table the paper describes for
-    categorical attributes, then orders categories per leaf by the Breiman
-    metric (P(last class | v) for classification — exact for binary
-    classification; mean(y|v) for regression — exact for L2) and scans the
-    ordered prefix cuts.
-
-    Returns (best_gain (L+1,), best_mask (L+1, arity) bool) — mask True means
-    the category goes to the LEFT child.
-    """
+) -> jnp.ndarray:
+    """The paper's 'attribute value x class -> count' table, (L+1, V, S)."""
     L1 = num_leaves + 1
     inbag = (w > 0) & (leaf_of > 0)
     contrib = jnp.where(inbag[:, None], stats, 0.0)
     flat = leaf_of * arity + x_col
     table = jax.ops.segment_sum(contrib, flat, num_segments=L1 * arity)
-    table = table.reshape(L1, arity, -1)                    # (L+1, V, S)
+    return table.reshape(L1, arity, -1)
+
+
+def best_categorical_split_from_table(
+    table: jnp.ndarray,          # (L+1, V, S) per-leaf count table
+    cand_leaf: jnp.ndarray,      # (L+1,) bool
+    impurity: str = "gini",
+    task: str = "classification",
+    min_records: float = 1.0,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Breiman ordering + ordered prefix cuts on a prebuilt count table.
+
+    Shared scoring for the jnp path (`best_categorical_split`) and the
+    Pallas `cat_hist` kernel path (kernels/ops.categorical_tables).
+    """
+    arity = table.shape[1]
     totals = table.sum(1)                                   # (L+1, S)
     cnt = count_fn(task)
 
@@ -283,3 +399,32 @@ def best_categorical_split(
     mask = jnp.take_along_axis(
         in_left_sorted, jnp.argsort(order, axis=1), axis=1)  # inverse perm
     return best_gain, mask
+
+
+@functools.partial(jax.jit, static_argnames=("num_leaves", "arity", "impurity", "task"))
+def best_categorical_split(
+    x_col: jnp.ndarray,          # (n,) int32 category values
+    leaf_of: jnp.ndarray,        # (n,) int32 in [0, L]
+    w: jnp.ndarray,              # (n,) float32
+    stats: jnp.ndarray,          # (n, S)
+    cand_leaf: jnp.ndarray,      # (L+1,) bool
+    num_leaves: int,
+    arity: int,
+    impurity: str = "gini",
+    task: str = "classification",
+    min_records: float = 1.0,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Best subset split x ∈ C per open leaf, one pass.
+
+    Builds the (leaf × category × stat) count table the paper describes for
+    categorical attributes, then orders categories per leaf by the Breiman
+    metric (P(last class | v) for classification — exact for binary
+    classification; mean(y|v) for regression — exact for L2) and scans the
+    ordered prefix cuts.
+
+    Returns (best_gain (L+1,), best_mask (L+1, arity) bool) — mask True means
+    the category goes to the LEFT child.
+    """
+    table = categorical_count_table(x_col, leaf_of, w, stats, num_leaves, arity)
+    return best_categorical_split_from_table(
+        table, cand_leaf, impurity, task, min_records)

@@ -7,6 +7,25 @@ the paper's splitters).  All nodes of a depth are split together, so the
 whole dataset is scanned once per candidate feature per LEVEL — never per
 node — which is the paper's central complexity win over Sprint.
 
+Data-plane structure (this is the hot path of the whole repo):
+
+  * `build_tree` runs ONE fused jitted program per depth level
+    (`_fused_level_step`): candidate draw, numeric supersplit (any
+    backend), categorical supersplit, cross-feature winner argmax,
+    condition evaluation (Alg. 2 step 5), leaf reassignment (step 6) and
+    next-level leaf totals, all with device-resident `leaf_of`/`stats`/`w`
+    state.  The host fetches exactly one small per-level struct (winning
+    feature / threshold / mask / gain per open leaf) for node bookkeeping —
+    the "one struct per level" protocol (DESIGN.md).
+  * For the default `segment` backend the fused step also maintains a
+    per-column (leaf, value)-sorted row order incrementally: children are
+    stable partitions of the parent's contiguous block, an O(n) segmented
+    cumsum per level instead of the per-level O(n log n) counting sort.
+  * `build_tree_reference` is the pre-fusion builder (one jitted call per
+    piece, numpy round-trips between them).  It is kept as the executable
+    specification: parity tests assert the fused builder reproduces its
+    trees exactly, and benchmarks/level_step_bench.py measures the speedup.
+
 Per-level network/disk accounting (paper Table 1) is recorded in
 `LevelStats` by the builder: one bit per sample per level broadcast
 ("Dn bits in D allreduce"), the ⌈log2(ℓ+1)⌉·n class-list bits, and the
@@ -148,9 +167,8 @@ def _categorical_supersplits(cat_cols, leaf_of, w, stats, cand, Lp, max_arity,
     return jax.vmap(per_col)(cat_cols, cand)
 
 
-@functools.partial(jax.jit, static_argnames=("m_num",))
-def _evaluate_conditions(num, cat, leaf_of, feat_of_leaf, thr_of_leaf,
-                         iscat_of_leaf, mask_of_leaf, m_num):
+def _eval_conditions_core(num, cat, leaf_of, feat_of_leaf, thr_of_leaf,
+                          iscat_of_leaf, mask_of_leaf, m_num):
     """Alg. 2 step 5: evaluate the winning condition of each sample's leaf.
 
     Returns bits (n,) bool — True = LEFT.  In the distributed engine this is
@@ -164,6 +182,10 @@ def _evaluate_conditions(num, cat, leaf_of, feat_of_leaf, thr_of_leaf,
     num_bit = xnum <= thr_of_leaf[leaf_of]
     cat_bit = mask_of_leaf[leaf_of, xcat]
     return jnp.where(iscat_of_leaf[leaf_of], cat_bit, num_bit)
+
+
+_evaluate_conditions = functools.partial(jax.jit, static_argnames=("m_num",))(
+    _eval_conditions_core)
 
 
 @functools.partial(jax.jit, static_argnames=("Lp",))
@@ -181,8 +203,210 @@ def _reassign(leaf_of, bits, new_left, new_right):
 
 
 # ---------------------------------------------------------------------------
+# The fused level step (one jitted device program per depth)
+# ---------------------------------------------------------------------------
+
+def _partition_leaf_order(ord_idx, lf_pos, bits, new_left, new_right,
+                          row_counts, key_counts):
+    """Advance the per-column (leaf, value)-sorted order to the next level.
+
+    Children occupy consecutive id ranges in parent order (left id <
+    right id, parents in id order, closed = 0), so the stable counting sort
+    by the NEW leaf id reduces to: closed rows to the front (stable), then
+    a stable left/right partition inside each parent's contiguous block —
+    O(n) work with ONE cumsum and ONE scatter per column, no sort.
+    Relative row order inside every child equals the parent's
+    (value-ascending), exactly what a stable sort would produce, so the
+    `segment` backend's summation order — and hence its float results —
+    are preserved bit-for-bit.
+
+    The block structure is column-independent (same leaf histogram in every
+    column), so everything except the row permutation itself — `lf_pos`,
+    the current `row_counts` (L+1,) and next-level `key_counts` (2L+1,)
+    histograms, block starts, target offsets — is computed once.  Only the
+    1-bit condition outcome `bits` (row-indexed) is gathered per column.
+    """
+    n = lf_pos.shape[0]
+    # parents either split wholly or close wholly, so a block is all-closed
+    # or all-left/right; closed rows keep their block order, preceded by
+    # the closed rows of earlier parents
+    parent_closed = new_left == 0                             # (Lp+1,)
+    closed_sizes = jnp.where(parent_closed, row_counts, 0)
+    closed_before = jnp.cumsum(closed_sizes) - closed_sizes   # per parent
+    offs = jnp.cumsum(key_counts) - key_counts                # per new key
+
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), lf_pos[1:] != lf_pos[:-1]])
+    start_idx = jax.lax.cummax(jnp.where(is_start, jnp.arange(n), -1))
+    in_block = jnp.arange(n) - start_idx                      # rank in block
+    closed_pos = parent_closed[lf_pos]
+    pos_closed = closed_before[lf_pos] + in_block             # (n,) shared
+    offs_l = offs[new_left[lf_pos]]
+    offs_r = offs[new_right[lf_pos]]
+
+    def upd(ordj):
+        wl = bits[ordj]                                       # went LEFT
+        cl = jnp.cumsum(wl.astype(jnp.int32)) - wl
+        left_rank = cl - cl[start_idx]
+        pos = jnp.where(
+            closed_pos, pos_closed,
+            jnp.where(wl, offs_l + left_rank,
+                      offs_r + in_block - left_rank))         # a permutation
+        return jnp.zeros_like(ordj).at[pos].set(ordj, unique_indices=True)
+
+    return jax.vmap(upd)(ord_idx)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "Lp", "m_num", "m_cat", "max_arity", "num_classes", "m_prime", "usb",
+    "impurity", "task", "min_records", "backend", "use_ord", "need_partition",
+    "supersplit_fn"))
+def _fused_level_step(num, cat, labels, sorted_vals, sorted_idx, ord_idx,
+                      leaf_of, w, stats, splittable_p, totals, row_counts,
+                      fkey, depth, *, Lp, m_num, m_cat, max_arity,
+                      num_classes, m_prime, usb, impurity, task, min_records,
+                      backend, use_ord, need_partition, supersplit_fn):
+    """One whole depth level of Alg. 2 as a single device program.
+
+    Steps 3-7 fused: candidate feature draw, numeric + categorical
+    supersplit search, partial-supersplit merge (cross-feature argmax),
+    condition evaluation, leaf reassignment, and the next level's leaf
+    totals.  Only the returned per-leaf struct (winning feature, gain,
+    threshold, category mask, split bitmap) is fetched by the host; the
+    row-indexed state (`leaf_of`, the per-column leaf order) stays
+    device-resident.
+
+    `supersplit_fn` (static) replaces the local numeric search with the
+    shard_map'd distributed one — it composes under this jit, so the same
+    fused program runs on the mesh (distributed.py).
+    """
+    L1 = Lp + 1
+    m = m_num + m_cat
+    n = leaf_of.shape[0]
+
+    # Alg. 2 step 3: seeded per-leaf candidate features (paper §2.2/§2.4)
+    cand = bagging.candidate_features(fkey, depth, Lp, m, m_prime, usb)
+    cand = cand & splittable_p[1:, None]
+    cand_p = jnp.concatenate([jnp.zeros((1, m), bool), cand], 0)  # leaf 0
+
+    gains_parts, masks = [], None
+    thr_num = jnp.zeros((max(m_num, 1), L1), jnp.float32)
+    if m_num:
+        cnum = cand_p[:, :m_num].T
+        if supersplit_fn is not None:
+            g, t = supersplit_fn(sorted_vals, sorted_idx, leaf_of, w, stats,
+                                 cnum, Lp, impurity, task, min_records)
+        elif backend == "kernel":
+            from repro.kernels import ops as kops
+            g, t = kops.split_scan_supersplit(
+                sorted_vals, sorted_idx, leaf_of, w, labels, cnum, Lp,
+                impurity, task, min_records, num_classes=num_classes)
+        elif use_ord:
+            # leaf-ordered fast path: no per-level counting sort.  Shared
+            # per-leaf totals are exact for classification (integer bag
+            # counts); regression reduces per column to keep the reference
+            # builder's float summation order bit-for-bit.
+            tot = totals if task == "classification" else None
+            lf_pos = leaf_of[ord_idx[0]]            # same for every column
+            inbag = (w > 0)[ord_idx] & (lf_pos > 0)[None]
+            ord_vals = jnp.take_along_axis(num.T, ord_idx, axis=1)
+            g, t = splits.best_numeric_split_leaf_ordered(
+                ord_vals, lf_pos, inbag, stats[ord_idx],
+                cnum, Lp, impurity, task, min_records, totals=tot,
+                row_counts=row_counts)
+        else:
+            g, t = _numeric_supersplits(
+                backend, sorted_vals, sorted_idx, leaf_of, w, stats,
+                cnum, Lp, impurity, task, min_records)
+        gains_parts.append(g)
+        thr_num = t
+    if m_cat:
+        ccat = cand_p[:, m_num:].T
+        if backend == "kernel":
+            from repro.kernels import ops as kops
+            tables = kops.categorical_tables(
+                cat.T, leaf_of, w, labels, V=max_arity, Lp=Lp, task=task,
+                num_classes=num_classes)
+            g, masks = jax.vmap(
+                lambda tb, c: splits.best_categorical_split_from_table(
+                    tb, c, impurity, task, min_records))(tables, ccat)
+        else:
+            g, masks = _categorical_supersplits(
+                cat.T, leaf_of, w, stats, ccat, Lp, max_arity, impurity,
+                task, min_records)
+        gains_parts.append(g)
+
+    all_gains = jnp.concatenate(gains_parts, axis=0)            # (m, L1)
+
+    # tree builder merges partial supersplits (Alg. 2 step 3, final argmax)
+    best_feat = jnp.argmax(all_gains, axis=0).astype(jnp.int32)  # (L1,)
+    best_gain = jnp.take_along_axis(all_gains, best_feat[None], 0)[0]
+    will_split = splittable_p & jnp.isfinite(best_gain) & (best_gain > 1e-9)
+
+    # children get consecutive 1-based ids in leaf order (Alg. 2 step 6)
+    ks = jnp.cumsum(will_split.astype(jnp.int32))
+    new_left = jnp.where(will_split, 2 * ks - 1, 0).astype(jnp.int32)
+    new_right = jnp.where(will_split, 2 * ks, 0).astype(jnp.int32)
+
+    feat_of_leaf = jnp.where(will_split, best_feat, 0).astype(jnp.int32)
+    iscat_of_leaf = will_split & (best_feat >= m_num) if m_cat else \
+        jnp.zeros((L1,), bool)
+    thr_sel = jnp.take_along_axis(
+        thr_num, jnp.clip(best_feat, 0, max(m_num - 1, 0))[None], 0)[0]
+    thr_of_leaf = jnp.where(will_split & ~iscat_of_leaf, thr_sel, 0.0)
+    if m_cat:
+        jc = jnp.clip(best_feat - m_num, 0, m_cat - 1)
+        mask_sel = masks[jc, jnp.arange(L1)]                    # (L1, V)
+        mask_of_leaf = jnp.where(iscat_of_leaf[:, None], mask_sel, False)
+    else:
+        mask_of_leaf = jnp.zeros((L1, max_arity), bool)
+
+    # Alg. 2 steps 5-6: 1-bit condition per sample, reassign to children
+    bits = _eval_conditions_core(num, cat, leaf_of, feat_of_leaf,
+                                 thr_of_leaf, iscat_of_leaf, mask_of_leaf,
+                                 m_num)
+    new_leaf_of = jnp.where(
+        leaf_of > 0,
+        jnp.where(bits, new_left[leaf_of], new_right[leaf_of]), 0)
+
+    # next-level totals (node values / counts / splittable for depth+1)
+    inb = (w > 0) & (new_leaf_of > 0)
+    next_totals = jax.ops.segment_sum(jnp.where(inb[:, None], stats, 0.0),
+                                      new_leaf_of, num_segments=2 * Lp + 1)
+
+    struct = {"best_feat": best_feat, "best_gain": best_gain,
+              "thr": thr_of_leaf, "mask": mask_of_leaf,
+              "will_split": will_split}
+    if use_ord:
+        key_counts = jax.ops.segment_sum(jnp.ones((n,), jnp.int32),
+                                         new_leaf_of, num_segments=2 * Lp + 1)
+        # becomes the next level's row_counts (host slices to the new Lp)
+        struct["key_counts"] = key_counts
+        if need_partition:
+            new_ord_idx = _partition_leaf_order(
+                ord_idx, lf_pos, bits, new_left, new_right, row_counts,
+                key_counts)
+        else:       # the next level cannot split again (max depth reached)
+            new_ord_idx = ord_idx
+    else:
+        new_ord_idx = ord_idx
+    return struct, new_leaf_of, new_ord_idx, next_totals
+
+
+# ---------------------------------------------------------------------------
 # The tree builder (Alg. 2)
 # ---------------------------------------------------------------------------
+
+def _tree_setup(sorted_vals, arities, labels, params):
+    n = int(labels.shape[0])
+    m_num = int(sorted_vals.shape[0]) if sorted_vals.size else 0
+    m_cat = len(arities)
+    m = m_num + m_cat
+    max_arity = max(arities) if arities else 1
+    m_prime = params.num_candidates or max(
+        1, math.isqrt(m) + (0 if math.isqrt(m) ** 2 == m else 1))
+    return n, m_num, m_cat, m, max_arity, m_prime
+
 
 def build_tree(
     *,
@@ -193,22 +417,216 @@ def build_tree(
     collect_stats: bool = False,
     supersplit_fn=None,
 ) -> tuple[Tree, list[LevelStats]]:
-    """Train one tree, depth level by depth level.
+    """Train one tree with ONE fused jitted device program per depth level.
+
+    Produces exactly the trees of `build_tree_reference` (asserted by
+    tests/test_fused_level.py) while the host does bookkeeping only: per
+    level it uploads the tiny (splittable, totals) pair and fetches one
+    small per-leaf struct; all row-indexed state stays on device.
 
     `supersplit_fn`, when given, replaces the local numeric supersplit search
-    (used by distributed.py to run it under shard_map on the mesh).
+    (used by distributed.py to run it under shard_map on the mesh — it
+    composes inside the fused jit).
     """
-    n = int(labels.shape[0])
-    m_num = int(sorted_vals.shape[0]) if sorted_vals.size else 0
-    m_cat = len(arities)
-    m = m_num + m_cat
-    max_arity = max(arities) if arities else 1
+    n, m_num, m_cat, m, max_arity, m_prime = _tree_setup(
+        sorted_vals, arities, labels, params)
     task = params.task
-    m_prime = params.num_candidates or max(1, math.isqrt(m) + (0 if math.isqrt(m) ** 2 == m else 1))
 
     w = bagging.bag_counts(seed, tree_idx, n, params.bagging)
     stats = splits.row_stats(labels, w, num_classes, task)
-    s_dim = stats.shape[-1]
+    fkey = jax.random.fold_in(jax.random.PRNGKey(seed ^ 0x5EED), tree_idx)
+
+    def cnt_np(t):
+        return t.sum(-1) if task == "classification" else t[..., 0]
+
+    # node storage (host lists)
+    feature, threshold, is_cat_l, cat_mask_l = [], [], [], []
+    children, value, n_node, gain_l, depth_l = [], [], [], [], []
+
+    def new_node(depth):
+        feature.append(-1); threshold.append(0.0); is_cat_l.append(False)
+        cat_mask_l.append(None); children.append([-1, -1])
+        value.append(np.zeros(max(num_classes, 2) if task == "classification" else 1,
+                              np.float32))
+        n_node.append(0.0); gain_l.append(0.0); depth_l.append(depth)
+        return len(feature) - 1
+
+    root = new_node(0)
+    open_nodes = [root]                       # leaf id h (1-based) -> node id
+    leaf_of = jnp.ones((n,), jnp.int32)       # all samples at the root
+    stats_log: list[LevelStats] = []
+
+    # the segment backend's leaf-ordered state; other backends read the
+    # plain presorted layout and get zero-size dummies for the other one
+    use_ord = (params.backend == "segment" and supersplit_fn is None
+               and m_num > 0)
+    # root: all rows in leaf 1, so value order == (leaf, value) order
+    ord_idx = sorted_idx if use_ord else jnp.zeros((0, 0), jnp.int32)
+
+    totals_np = None
+    row_counts_np = None
+    for depth in range(params.max_depth + 1):
+        L = len(open_nodes)
+        if L == 0:
+            break
+        Lp = _pad_leaves(L, params.leaf_pad)
+
+        # leaf totals -> node values & forced closes (carried over from the
+        # previous level's fused step; computed once at the root)
+        if totals_np is None:
+            totals_np = np.asarray(_leaf_totals(leaf_of, stats, w, Lp))
+            row_counts_np = np.zeros(Lp + 1, np.int32)
+            row_counts_np[1] = n
+        else:
+            cur = np.zeros((Lp + 1, totals_np.shape[1]), np.float32)
+            cur[:L + 1] = totals_np[:L + 1]
+            totals_np = cur
+            cur_rc = np.zeros(Lp + 1, np.int32)
+            k = min(L + 1, len(row_counts_np))   # only threaded if use_ord
+            cur_rc[:k] = row_counts_np[:k]
+            row_counts_np = cur_rc
+        counts = cnt_np(totals_np)
+        for h, node in enumerate(open_nodes, start=1):
+            n_node[node] = float(counts[h])
+            if task == "classification":
+                tot = max(counts[h], 1e-12)
+                value[node] = (totals_np[h] / tot).astype(np.float32)
+            else:
+                wsum = max(totals_np[h, 0], 1e-12)
+                value[node] = np.array([totals_np[h, 1] / wsum], np.float32)
+
+        at_max_depth = depth >= params.max_depth
+        splittable = np.array(
+            [counts[h] >= 2 * params.min_records and not at_max_depth
+             for h in range(1, L + 1)] + [False] * (Lp - L))
+        if not splittable.any():
+            break
+        splittable_p = np.concatenate([[False], splittable])
+
+        # the whole level on device: one dispatch, one small struct back
+        struct, leaf_of, ord_idx, next_totals = _fused_level_step(
+            num, cat, labels,
+            jnp.zeros((0, 0), jnp.float32) if use_ord else sorted_vals,
+            jnp.zeros((0, 0), jnp.int32) if use_ord else sorted_idx,
+            ord_idx, leaf_of, w, stats,
+            jnp.asarray(splittable_p), jnp.asarray(totals_np),
+            jnp.asarray(row_counts_np), fkey,
+            jnp.int32(depth), Lp=Lp, m_num=m_num, m_cat=m_cat,
+            max_arity=max_arity, num_classes=num_classes, m_prime=m_prime,
+            usb=params.usb, impurity=params.impurity, task=task,
+            min_records=params.min_records, backend=params.backend,
+            use_ord=use_ord,
+            need_partition=use_ord and depth + 1 < params.max_depth,
+            supersplit_fn=supersplit_fn)
+        host, totals_np = jax.device_get((struct, next_totals))
+        if use_ord:
+            row_counts_np = host["key_counts"]
+
+        # Alg. 2 step 8: the host bookkeeping — grow the flat tree
+        bf, bg = host["best_feat"], host["best_gain"]
+        thr, mask, ws = host["thr"], host["mask"], host["will_split"]
+        next_open: list[int] = []
+        any_split = False
+        for h in range(1, L + 1):
+            if not ws[h]:
+                continue
+            node = open_nodes[h - 1]
+            j = int(bf[h])
+            any_split = True
+            feature[node] = j
+            gain_l[node] = float(bg[h])
+            if j < m_num:
+                threshold[node] = float(thr[h])
+            else:
+                is_cat_l[node] = True
+                cat_mask_l[node] = mask[h].copy()
+            lc, rc = new_node(depth + 1), new_node(depth + 1)
+            children[node] = [lc, rc]
+            next_open.extend([lc, rc])
+
+        if collect_stats:
+            open_w = float(counts[1:L + 1].sum())
+            stats_log.append(LevelStats(
+                depth=depth, open_leaves=L,
+                network_bits_bitmap=int(open_w),
+                network_bits_supersplit=int(m * (Lp + 1) * 64),
+                class_list_bits=class_list.storage_bits(n, L),
+                feature_passes=int(min(m_prime * (1 if params.usb else L), m)),
+                rows_scanned=n * min(m_prime * (1 if params.usb else L), m)))
+
+        if not any_split:
+            break
+        open_nodes = next_open
+
+        # Sprint-style pruning switch (paper §3): compact rows in closed
+        # leaves once they dominate (host-side, rare; exact — see reference)
+        if params.prune_closed_frac < 1.0 and n > 0:
+            lf_np = np.asarray(leaf_of)
+            keep = lf_np > 0
+            frac_closed = 1.0 - keep.mean()
+            if frac_closed >= params.prune_closed_frac and keep.any() \
+                    and keep.sum() < n:
+                remap = np.cumsum(keep) - 1
+                n_new = int(keep.sum())
+                if use_ord:
+                    oi = np.asarray(ord_idx)
+                    kept_cols = keep[oi]
+                    new_oi = np.empty((m_num, n_new), np.int32)
+                    for j in range(m_num):
+                        new_oi[j] = remap[oi[j][kept_cols[j]]]
+                    ord_idx = jnp.asarray(new_oi)
+                    row_counts_np = row_counts_np.copy()
+                    row_counts_np[0] = 0      # the dropped (closed) rows
+                elif m_num:
+                    idx_np = np.asarray(sorted_idx)
+                    vals_np = np.asarray(sorted_vals)
+                    kept_cols = keep[idx_np]
+                    new_idx = np.empty((m_num, n_new), np.int32)
+                    new_vals = np.empty((m_num, n_new), np.float32)
+                    for j in range(m_num):
+                        sel = kept_cols[j]
+                        new_idx[j] = remap[idx_np[j][sel]]
+                        new_vals[j] = vals_np[j][sel]
+                    sorted_idx = jnp.asarray(new_idx)
+                    sorted_vals = jnp.asarray(new_vals)
+                num = num[jnp.asarray(keep)] if num.size else num
+                cat = cat[jnp.asarray(keep)] if cat.size else cat
+                stats = stats[jnp.asarray(keep)]
+                w = w[jnp.asarray(keep)]
+                labels = labels[jnp.asarray(keep)]
+                leaf_of = jnp.asarray(lf_np[keep])
+                n = n_new
+
+    return _assemble_tree(feature, threshold, is_cat_l, cat_mask_l, children,
+                          value, n_node, gain_l, depth_l, max_arity, m_num,
+                          task), stats_log
+
+
+# ---------------------------------------------------------------------------
+# The reference (pre-fusion) tree builder — executable specification
+# ---------------------------------------------------------------------------
+
+def build_tree_reference(
+    *,
+    num: jnp.ndarray, cat: jnp.ndarray, labels: jnp.ndarray,
+    sorted_vals: jnp.ndarray, sorted_idx: jnp.ndarray,
+    arities: tuple[int, ...], num_classes: int,
+    params: TreeParams, seed: int, tree_idx: int,
+    collect_stats: bool = False,
+    supersplit_fn=None,
+) -> tuple[Tree, list[LevelStats]]:
+    """The seed builder: one jitted call per level piece, numpy in between.
+
+    Kept as the executable specification of Alg. 2 — the fused `build_tree`
+    must reproduce its trees exactly (tests/test_fused_level.py), and
+    benchmarks/level_step_bench.py measures the fused speedup against it.
+    """
+    n, m_num, m_cat, m, max_arity, m_prime = _tree_setup(
+        sorted_vals, arities, labels, params)
+    task = params.task
+
+    w = bagging.bag_counts(seed, tree_idx, n, params.bagging)
+    stats = splits.row_stats(labels, w, num_classes, task)
     cnt = splits.count_fn(task)
     fkey = jax.random.fold_in(jax.random.PRNGKey(seed ^ 0x5EED), tree_idx)
 
@@ -273,7 +691,7 @@ def build_tree(
                 g, t = kops.split_scan_supersplit(
                     sorted_vals, sorted_idx, leaf_of, w, labels,
                     cand_p[:, :m_num].T, Lp, params.impurity, task,
-                    params.min_records)
+                    params.min_records, num_classes=num_classes)
             else:
                 g, t = _numeric_supersplits(
                     params.backend, sorted_vals, sorted_idx, leaf_of, w, stats,
@@ -375,12 +793,19 @@ def build_tree(
                 leaf_of = jnp.asarray(lf_np[keep])
                 n = n_new
 
+    return _assemble_tree(feature, threshold, is_cat_l, cat_mask_l, children,
+                          value, n_node, gain_l, depth_l, max_arity, m_num,
+                          task), stats_log
+
+
+def _assemble_tree(feature, threshold, is_cat_l, cat_mask_l, children, value,
+                   n_node, gain_l, depth_l, max_arity, m_num, task) -> Tree:
     N = len(feature)
     cat_mask_arr = np.zeros((N, max_arity), bool)
     for i, cm in enumerate(cat_mask_l):
         if cm is not None:
             cat_mask_arr[i, :len(cm)] = cm
-    tree = Tree(
+    return Tree(
         feature=np.asarray(feature, np.int32),
         threshold=np.asarray(threshold, np.float32),
         is_cat=np.asarray(is_cat_l, bool),
@@ -391,7 +816,6 @@ def build_tree(
         gain=np.asarray(gain_l, np.float32),
         depth=np.asarray(depth_l, np.int32),
         m_num=m_num, task=task)
-    return tree, stats_log
 
 
 # ---------------------------------------------------------------------------

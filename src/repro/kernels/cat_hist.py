@@ -54,6 +54,11 @@ def _cat_hist_kernel(x_ref, leaf_ref, w_ref, y_ref, out_ref, acc_scr,
         out_ref[...] = acc_scr[...].reshape(1, L1, bv, s_dim)
 
 
+def default_bv(V: int, L1: int) -> int:
+    """Category-block size keeping the VMEM table under ~L1*4096 floats."""
+    return min(V, max(1, 4096 // L1))
+
+
 @functools.partial(jax.jit, static_argnames=("L1", "V", "s_dim", "bv", "bn",
                                              "task", "interpret"))
 def cat_hist_pallas(x, leaf, w, y, *, L1, V, s_dim, bv=None, bn=256,
@@ -62,10 +67,11 @@ def cat_hist_pallas(x, leaf, w, y, *, L1, V, s_dim, bv=None, bn=256,
 
     x/leaf/w/y: (m, n) int32/int32/f32/f32 (row order irrelevant — counting
     is order-free, so no presorting needed for categorical columns, exactly
-    as in the paper).
+    as in the paper).  V must be a multiple of bv and n of bn; the
+    `kernels.ops.categorical_tables` wrapper pads both for arbitrary shapes.
     """
     m, n = x.shape
-    bv = bv or min(V, max(1, 4096 // L1))
+    bv = bv or default_bv(V, L1)
     assert n % bn == 0 and V % bv == 0
     grid = (m, V // bv, n // bn)
     kernel = functools.partial(_cat_hist_kernel, L1=L1, bv=bv, bn=bn,

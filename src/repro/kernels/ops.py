@@ -2,8 +2,14 @@
 
 These adapt the tree builder's (sorted_idx, leaf_of, w, labels) state to the
 kernels' pre-gathered blocked layout, handle padding (row blocks, leaf-lane
-alignment), and select interpret mode automatically off-TPU.  The `"kernel"`
-numeric backend used by `tree.TreeParams(backend="kernel")` lands here.
+alignment, arity blocks), and select interpret mode automatically off-TPU.
+The `"kernel"` numeric backend used by `tree.TreeParams(backend="kernel")`
+lands here, as does the kernel categorical path of the fused level step.
+
+Both entry points take the stat dimension from the caller (`num_classes`):
+deriving it from `labels.max()` would be a per-call device->host sync in the
+middle of the level loop (and is impossible under jit).  The seed behaviour
+is kept as an eager-only fallback when `num_classes` is omitted.
 """
 from __future__ import annotations
 
@@ -23,9 +29,19 @@ def _pad_rows(n: int, bn: int) -> int:
     return (-n) % bn
 
 
+def _stat_dim(labels, num_classes, task: str) -> int:
+    if task != "classification":
+        return 3
+    if num_classes is None:
+        # eager-only fallback (device sync); pass num_classes to avoid it
+        return max(int(labels.max()) + 1, 2)
+    return max(int(num_classes), 2)
+
+
 def split_scan_supersplit(sorted_vals, sorted_idx, leaf_of, w, labels,
                           cand, Lp, impurity="gini", task="classification",
-                          min_records=1.0, bn=256, interpret=None):
+                          min_records=1.0, bn=256, interpret=None,
+                          num_classes=None):
     """All-columns supersplit via the Pallas kernel.
 
     sorted_vals/sorted_idx: (m, n); cand: (m, Lp+1) bool;
@@ -35,8 +51,7 @@ def split_scan_supersplit(sorted_vals, sorted_idx, leaf_of, w, labels,
         interpret = not _on_tpu()
     m, n = sorted_vals.shape
     L1 = Lp + 1
-    s_dim = int(labels.max()) + 1 if task == "classification" else 3
-    s_dim = max(s_dim, 2) if task == "classification" else 3
+    s_dim = _stat_dim(labels, num_classes, task)
 
     leaf_g = leaf_of[sorted_idx]                      # (m, n)
     w_g = w[sorted_idx]
@@ -67,13 +82,20 @@ def split_scan_supersplit(sorted_vals, sorted_idx, leaf_of, w, labels,
 
 
 def categorical_tables(cat_cols, leaf_of, w, labels, *, V, Lp,
-                       task="classification", bn=256, interpret=None):
-    """Count tables (m_cat, Lp+1, V, S) via the Pallas cat_hist kernel."""
+                       task="classification", bn=256, bv=None, interpret=None,
+                       num_classes=None):
+    """Count tables (m_cat, Lp+1, V, S) via the Pallas cat_hist kernel.
+
+    Arbitrary arity V is supported: the category axis is padded up to a
+    multiple of the kernel's category-block `bv` (values >= V never occur in
+    the data, so the padded lanes stay zero) and the result is sliced back.
+    """
     if interpret is None:
         interpret = not _on_tpu()
     m, n = cat_cols.shape
-    s_dim = int(labels.max()) + 1 if task == "classification" else 3
-    s_dim = max(s_dim, 2) if task == "classification" else 3
+    s_dim = _stat_dim(labels, num_classes, task)
+    bv = bv or cat_hist.default_bv(V, Lp + 1)
+    Vp = V + (-V) % bv
     pad = _pad_rows(n, bn)
     leaf_b = jnp.broadcast_to(leaf_of, (m, n))
     w_b = jnp.broadcast_to(w, (m, n))
@@ -83,6 +105,7 @@ def categorical_tables(cat_cols, leaf_of, w, labels, *, V, Lp,
         leaf_b = jnp.pad(leaf_b, ((0, 0), (0, pad)))
         w_b = jnp.pad(w_b, ((0, 0), (0, pad)))
         y_b = jnp.pad(y_b, ((0, 0), (0, pad)))
-    return cat_hist.cat_hist_pallas(
-        cat_cols, leaf_b, w_b, y_b, L1=Lp + 1, V=V, s_dim=s_dim, bn=bn,
-        task=task, interpret=interpret)
+    tables = cat_hist.cat_hist_pallas(
+        cat_cols, leaf_b, w_b, y_b, L1=Lp + 1, V=Vp, s_dim=s_dim, bv=bv,
+        bn=bn, task=task, interpret=interpret)
+    return tables[:, :, :V, :] if Vp != V else tables

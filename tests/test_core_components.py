@@ -1,9 +1,16 @@
-"""class_list / bagging / presort unit + property tests."""
+"""class_list / bagging / presort unit + property tests.
+
+`hypothesis` is an OPTIONAL dev dependency (see DESIGN.md §Testing): when
+absent this whole module is skipped at collection instead of erroring the
+run.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import bagging, class_list, presort
 
