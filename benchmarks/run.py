@@ -12,9 +12,18 @@ import time
 
 def main() -> None:
     from benchmarks import (fig1_auc_scaling, fig2_time_scaling,
-                            fig3_depth_metrics, kernel_bench,
-                            level_step_bench, table1_complexity)
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+                            fig3_depth_metrics, forest_batch_bench,
+                            kernel_bench, level_step_bench,
+                            table1_complexity)
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    flags = {a for a in sys.argv[1:] if a.startswith("--")}
+    unknown = flags - {"--smoke", "--full"}
+    if unknown:
+        raise SystemExit(f"unknown flags: {sorted(unknown)} "
+                         "(supported: --smoke, --full)")
+    only = args[0] if args else None
+    smoke = "--smoke" in flags
+    full = "--full" in flags
     benches = {
         "table1": table1_complexity.run,
         "fig2": fig2_time_scaling.run,
@@ -23,6 +32,9 @@ def main() -> None:
         "fig1": fig1_auc_scaling.run,
         # writes BENCH_level_step.json (fused vs reference per-level time)
         "level": level_step_bench.run,
+        # writes BENCH_forest_batch.json (batched vs per-tree forest fit);
+        # honours --smoke (seconds-scale) and --full (adds the 250k point)
+        "forest": lambda: forest_batch_bench.run(full=full, smoke=smoke),
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():

@@ -40,6 +40,19 @@ def bag_counts(seed: jnp.ndarray, tree_idx, n: int, mode: str = "poisson") -> jn
     raise ValueError(f"unknown bagging mode {mode!r}")
 
 
+@functools.partial(jax.jit, static_argnames=("n", "mode"))
+def bag_counts_forest(seed, tree_indices: jnp.ndarray, n: int,
+                      mode: str = "poisson") -> jnp.ndarray:
+    """`bag_counts` for a batch of trees at once. Returns (T, n) float32.
+
+    Bit-identical per tree to calling `bag_counts(seed, t, n, mode)` — the
+    fold-in chain is elementwise, so the batched draw of tree t equals the
+    per-tree draw (asserted by tests/test_forest_batch.py).  Used by
+    `tree.build_forest` to stack the per-tree bootstrap row weights.
+    """
+    return jax.vmap(lambda t: bag_counts(seed, t, n, mode))(tree_indices)
+
+
 @functools.partial(jax.jit, static_argnames=("num_leaves", "m", "m_prime", "usb"))
 def candidate_features(
     key: jnp.ndarray, depth, num_leaves: int, m: int, m_prime: int, usb: bool = False
@@ -50,11 +63,19 @@ def candidate_features(
     leaf h.  With `usb=True` (Unique Set of Bagged features per depth, z=1)
     one draw is shared by every leaf of the depth, the variant the paper's
     complexity analysis §3.2 shows is critical for distributed cost.
+
+    The draw is PADDING-INDEPENDENT: each leaf row folds its own index into
+    the (key, depth) key and draws (m,) uniforms, so row h of the returned
+    mask depends only on (key, depth, h, m, m_prime) — never on
+    `num_leaves`.  The tree builders pad the open-leaf count (per tree, or
+    to the batch maximum in `tree.build_forest`), and this property is what
+    keeps padded and differently-padded builds bit-identical.
     """
     key = jax.random.fold_in(key, depth)
     z = 1 if usb else num_leaves
     # Draw m' features without replacement per subset via uniform top-k.
-    g = jax.random.uniform(key, (z, m))
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(key, jnp.arange(z))
+    g = jax.vmap(lambda k: jax.random.uniform(k, (m,)))(keys)
     _, idx = jax.lax.top_k(g, m_prime)
     mask = jnp.zeros((z, m), bool).at[jnp.arange(z)[:, None], idx].set(True)
     if usb:

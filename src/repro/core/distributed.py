@@ -1,6 +1,6 @@
 """DRF distribution on the TPU mesh (paper §2 worker topology → shard_map).
 
-Topology mapping (DESIGN.md §2):
+Topology mapping (DESIGN.md §5):
 
   * "model" axis  = the splitters: feature columns are sharded over it, each
     device searching optimal splits only on its own columns (paper: "each

@@ -37,9 +37,18 @@ from repro.core.dataset import TabularDataset
 class PackedForest:
     """All trees of a forest in one set of padded flat arrays.
 
+    `pack_trees` pads every tree to the forest maxima — N = max node count,
+    V = max categorical arity, C = max value width — and stacks them, so a
+    T-tree forest is six device arrays with a leading tree axis (shapes
+    below) instead of T Python objects.  This is what makes whole-forest
+    inference ONE jitted program (`RandomForest.predict_proba`): a vmap
+    over the tree axis of a fori_loop descent with the single static
+    iteration bound `iters`.
+
     Nodes beyond a tree's `num_nodes` are padding leaves (feature −1,
     value 0); they are unreachable because the descent starts at node 0 and
-    leaves are absorbing.
+    leaves are absorbing.  Feature ids < `m_num` are numeric (threshold
+    rule x <= thr), the rest categorical (membership in `cat_mask`).
     """
     feature: jnp.ndarray     # (T, N) int32; -1 = leaf
     threshold: jnp.ndarray   # (T, N) float32
@@ -125,9 +134,34 @@ _forest_predict = jax.jit(
 
 @dataclasses.dataclass
 class RandomForest:
+    """The paper's DRF: an exact Random Forest trained level by level.
+
+    Construction params:
+      params:     `tree.TreeParams` — depth/impurity/backend etc.; see its
+                  fields for the paper hyper-parameters (m', min_records,
+                  USB, Sprint pruning).
+      num_trees:  forest size T.
+      seed:       forest seed; ALL randomness (bagging, candidate features)
+                  is a pure function of (seed, tree index) — the paper's
+                  zero-communication seeding (§2.2).
+      tree_batch: how many trees to train per batched device program
+                  (DESIGN.md §3).  None (default) picks a memory-bounded
+                  batch automatically; 1 forces the per-tree builder; any
+                  k > 1 trains the forest in ⌈T/k⌉ chunks, each chunk
+                  issuing ONE jitted program per depth level for all its
+                  trees.  Trees are bit-identical for every choice.
+
+    `fit(ds)` trains on a `TabularDataset` and packs the trees into a
+    `PackedForest`, after which `predict` / `predict_proba` (forest mean,
+    (B, C)) and `predict_proba_per_tree` ((T, B, C)) are each ONE jitted
+    device call regardless of T.  `oob_score`, `auc`, and
+    `feature_importances` are the paper's evaluation utilities.
+    """
+
     params: tree_lib.TreeParams
     num_trees: int = 10
     seed: int = 0
+    tree_batch: Optional[int] = None
 
     trees: list = dataclasses.field(default_factory=list)
     level_stats: list = dataclasses.field(default_factory=list)
@@ -137,8 +171,30 @@ class RandomForest:
     packed: Optional[PackedForest] = None
 
     # ------------------------------------------------------------------
+    def _resolve_tree_batch(self, ds: TabularDataset) -> int:
+        """Trees per batched level program (1 = per-tree builder).
+
+        The auto heuristic bounds the batched step's largest row-indexed
+        intermediate (T·m_num·n elements, ~256 MB f32) and caps at 16 —
+        past that the programs are compute-bound and batching wider only
+        adds memory pressure.
+        """
+        if self.tree_batch is not None:
+            return max(1, min(int(self.tree_batch), self.num_trees))
+        per_tree = max(1, max(ds.m_num, 1) * ds.n)
+        return int(max(1, min(self.num_trees, 16, (1 << 26) // per_tree)))
+
     def fit(self, ds: TabularDataset, collect_stats: bool = False,
             supersplit_fn=None) -> "RandomForest":
+        """Train the forest; one batched device program per depth level.
+
+        Trees are chunked into `tree_batch`-sized groups and each group is
+        built by `tree.build_forest` — the fused level step vmapped over
+        the tree axis.  Configurations the batched builder does not cover
+        (a distributed `supersplit_fn`, Sprint row pruning) fall back to
+        the per-tree `tree.build_tree` loop; the trees are identical either
+        way, only the dispatch count changes.
+        """
         ds.validate()
         self.num_classes = ds.num_classes
         self.m, self.m_num = ds.m, ds.m_num
@@ -149,16 +205,28 @@ class RandomForest:
         else:
             sorted_idx = jnp.zeros((0, ds.n), jnp.int32)
             sorted_vals = jnp.zeros((0, ds.n), jnp.float32)
+        kw = dict(num=ds.num, cat=ds.cat, labels=ds.labels,
+                  sorted_vals=sorted_vals, sorted_idx=sorted_idx,
+                  arities=ds.arities, num_classes=ds.num_classes,
+                  params=self.params, seed=self.seed,
+                  collect_stats=collect_stats)
+        tb = self._resolve_tree_batch(ds)
+        if supersplit_fn is not None or self.params.prune_closed_frac < 1.0:
+            tb = 1                      # per-tree-only configurations
         self.trees, self.level_stats = [], []
-        for t in range(self.num_trees):
-            tr, stats = tree_lib.build_tree(
-                num=ds.num, cat=ds.cat, labels=ds.labels,
-                sorted_vals=sorted_vals, sorted_idx=sorted_idx,
-                arities=ds.arities, num_classes=ds.num_classes,
-                params=self.params, seed=self.seed, tree_idx=t,
-                collect_stats=collect_stats, supersplit_fn=supersplit_fn)
-            self.trees.append(tr)
-            self.level_stats.append(stats)
+        if tb > 1:
+            for lo in range(0, self.num_trees, tb):
+                trees, stats = tree_lib.build_forest(
+                    tree_indices=range(lo, min(lo + tb, self.num_trees)),
+                    **kw)
+                self.trees.extend(trees)
+                self.level_stats.extend(stats)
+        else:
+            for t in range(self.num_trees):
+                tr, stats = tree_lib.build_tree(
+                    tree_idx=t, supersplit_fn=supersplit_fn, **kw)
+                self.trees.append(tr)
+                self.level_stats.append(stats)
         self.packed = pack_trees(self.trees)      # stacked inference arrays
         return self
 

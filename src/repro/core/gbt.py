@@ -36,6 +36,23 @@ class GBTParams:
 
 @dataclasses.dataclass
 class GBTModel:
+    """Gradient Boosted Trees on the DRF tree builder (paper §1).
+
+    Each boosting round fits one regression tree (variance impurity,
+    `bagging="none"`, all features candidates by default) to the current
+    pseudo-residuals with the same fused one-program-per-level builder as
+    `RandomForest` — rounds are sequential (tree t+1 needs tree t's
+    predictions), so GBT uses the per-tree builder, not the multi-tree
+    batch.  Losses: `"squared"` (regression; `predict` returns the raw
+    score) and `"logistic"` (binary classification; `predict` thresholds
+    at 0, `predict_proba` returns (B, 2) probabilities).
+
+    `fit(ds)` expects a `TabularDataset`; for `"logistic"` the labels must
+    be 0/1 ints.  `base_score` is the fitted prior (mean / log-odds) that
+    every prediction starts from.  Inputs to `predict*` are (B, m_num)
+    numeric and (B, m_cat) categorical arrays, as for `RandomForest`.
+    """
+
     params: GBTParams
     trees: list = dataclasses.field(default_factory=list)
     base_score: float = 0.0

@@ -40,6 +40,25 @@ import jax.numpy as jnp
 
 NEG = jnp.float32(-jnp.inf)
 
+# jax<0.5 compat: `optimization_barrier` ships without a vmap batching rule.
+# The barrier is an identity per operand (it only pins values against XLA
+# re-fusion), so batching is a pass-through.  Registered here so the
+# leaf-ordered supersplit below — which pins gain/tau before its
+# associative scan — also lowers under the tree-axis vmap of
+# `tree.build_forest` (DESIGN.md §3).
+try:  # pragma: no cover - newer jax moves these private paths (and ships
+    # the rule built in, making the shim unnecessary); anything else that
+    # goes wrong here should surface, not turn into an opaque vmap error
+    from jax._src.interpreters import batching as _batching
+    from jax._src.lax.lax import optimization_barrier_p as _opt_barrier_p
+
+    if _opt_barrier_p not in _batching.primitive_batchers:
+        def _opt_barrier_batcher(args, dims, **params):
+            return _opt_barrier_p.bind(*args, **params), dims
+        _batching.primitive_batchers[_opt_barrier_p] = _opt_barrier_batcher
+except (ImportError, AttributeError):
+    pass
+
 
 # ---------------------------------------------------------------------------
 # Stats & impurities
@@ -106,7 +125,7 @@ def best_numeric_split_scan(
 
     The optional h_init/v_init/totals let a row shard resume the scan exactly
     where the previous (presorted-order) shard left off — the 2-D sharding
-    extension (DESIGN.md §2).  Returns (best_gain, best_threshold), each
+    extension (DESIGN.md §5).  Returns (best_gain, best_threshold), each
     (L+1,); entry 0 (closed) unused.
     """
     L1, s_dim = num_leaves + 1, stats_sorted.shape[-1]
@@ -369,7 +388,29 @@ def best_categorical_split_from_table(
     """Breiman ordering + ordered prefix cuts on a prebuilt count table.
 
     Shared scoring for the jnp path (`best_categorical_split`) and the
-    Pallas `cat_hist` kernel path (kernels/ops.categorical_tables).
+    Pallas `cat_hist` kernel path (kernels/ops.categorical_tables) — the
+    table layout is identical, so the two backends give identical splits.
+
+    Args:
+      table:     (L+1, V, S) per-(leaf, category) stat sums — bag-weighted
+                 one-hot class counts (S = C, classification) or
+                 [w, wy, wy²] (S = 3, regression).  Row 0 (the closed-leaf
+                 sentinel) is ignored.  V may include padded categories;
+                 they are empty (all-zero) and sort last, so cuts only
+                 enumerate populated prefixes.
+      cand_leaf: (L+1,) bool — leaves for which this feature is a
+                 candidate; others return gain −inf.
+      impurity/task/min_records: as for the numeric engines; both children
+                 of a reported cut have >= min_records in-bag weight.
+
+    Categories are ordered per leaf by the Breiman metric — P(last class |
+    v) for classification (exact for binary), mean(y | v) for regression
+    (exact for L2) — and only the V−1 ordered prefix cuts are scored: the
+    optimal subset split for those cases at O(V log V) instead of 2^V.
+
+    Returns (best_gain (L+1,), mask (L+1, V) bool); mask True sends the
+    category to the LEFT child.  Under `tree.build_forest` this whole
+    search is vmapped over a leading tree axis.
     """
     arity = table.shape[1]
     totals = table.sum(1)                                   # (L+1, S)

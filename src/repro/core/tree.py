@@ -21,6 +21,9 @@ Data-plane structure (this is the hot path of the whole repo):
     per-column (leaf, value)-sorted row order incrementally: children are
     stable partitions of the parent's contiguous block, an O(n) segmented
     cumsum per level instead of the per-level O(n log n) counting sort.
+  * `build_forest` trains a whole BATCH of trees per level program — the
+    same fused step vmapped (or lax.map'd) over a leading tree axis, T·D →
+    D dispatches per forest, bit-identical per tree (DESIGN.md §3).
   * `build_tree_reference` is the pre-fusion builder (one jitted call per
     piece, numpy round-trips between them).  It is kept as the executable
     specification: parity tests assert the fused builder reproduces its
@@ -225,47 +228,90 @@ def _partition_leaf_order(ord_idx, lf_pos, bits, new_left, new_right,
     the current `row_counts` (L+1,) and next-level `key_counts` (2L+1,)
     histograms, block starts, target offsets — is computed once.  Only the
     1-bit condition outcome `bits` (row-indexed) is gathered per column.
+
+    Accepts an optional LEADING TREE AXIS on every argument
+    (ord_idx (T, m, n), the rest (T, ...)): the batched level step calls it
+    this way, outside its tree-axis vmap, so the permutation lands in ONE
+    flat scatter over all T·m columns — XLA lowers a batched-operand
+    scatter (what vmap would produce) far slower than the same scatter on a
+    flattened index space (~2x on CPU, measured).  The per-tree call takes
+    the same flat-scatter path with T = 1.
     """
-    n = lf_pos.shape[0]
-    # parents either split wholly or close wholly, so a block is all-closed
-    # or all-left/right; closed rows keep their block order, preceded by
-    # the closed rows of earlier parents
-    parent_closed = new_left == 0                             # (Lp+1,)
-    closed_sizes = jnp.where(parent_closed, row_counts, 0)
-    closed_before = jnp.cumsum(closed_sizes) - closed_sizes   # per parent
-    offs = jnp.cumsum(key_counts) - key_counts                # per new key
+    batched = ord_idx.ndim == 3
+    if not batched:
+        ord_idx, lf_pos, bits = ord_idx[None], lf_pos[None], bits[None]
+        new_left, new_right = new_left[None], new_right[None]
+        row_counts, key_counts = row_counts[None], key_counts[None]
+    B, m, n = ord_idx.shape
 
-    is_start = jnp.concatenate(
-        [jnp.ones((1,), bool), lf_pos[1:] != lf_pos[:-1]])
-    start_idx = jax.lax.cummax(jnp.where(is_start, jnp.arange(n), -1))
-    in_block = jnp.arange(n) - start_idx                      # rank in block
-    closed_pos = parent_closed[lf_pos]
-    pos_closed = closed_before[lf_pos] + in_block             # (n,) shared
-    offs_l = offs[new_left[lf_pos]]
-    offs_r = offs[new_right[lf_pos]]
+    def shared(lf_pos, new_left, new_right, row_counts, key_counts):
+        # parents either split wholly or close wholly, so a block is
+        # all-closed or all-left/right; closed rows keep their block order,
+        # preceded by the closed rows of earlier parents
+        parent_closed = new_left == 0                         # (Lp+1,)
+        closed_sizes = jnp.where(parent_closed, row_counts, 0)
+        closed_before = jnp.cumsum(closed_sizes) - closed_sizes
+        offs = jnp.cumsum(key_counts) - key_counts            # per new key
+        is_start = jnp.concatenate(
+            [jnp.ones((1,), bool), lf_pos[1:] != lf_pos[:-1]])
+        start_idx = jax.lax.cummax(jnp.where(is_start, jnp.arange(n), -1))
+        in_block = jnp.arange(n) - start_idx                  # rank in block
+        return (start_idx, in_block, parent_closed[lf_pos],
+                closed_before[lf_pos] + in_block,             # (n,) shared
+                offs[new_left[lf_pos]], offs[new_right[lf_pos]])
 
-    def upd(ordj):
-        wl = bits[ordj]                                       # went LEFT
-        cl = jnp.cumsum(wl.astype(jnp.int32)) - wl
-        left_rank = cl - cl[start_idx]
-        pos = jnp.where(
-            closed_pos, pos_closed,
-            jnp.where(wl, offs_l + left_rank,
-                      offs_r + in_block - left_rank))         # a permutation
-        return jnp.zeros_like(ordj).at[pos].set(ordj, unique_indices=True)
+    start_idx, in_block, closed_here, pos_closed, offs_l, offs_r = \
+        jax.vmap(shared)(lf_pos, new_left, new_right, row_counts, key_counts)
 
-    return jax.vmap(upd)(ord_idx)
+    wl = jax.vmap(lambda b, oi: b[oi])(                       # went LEFT
+        bits, ord_idx.reshape(B, m * n)).reshape(B, m, n)
+    cl = jnp.cumsum(wl.astype(jnp.int32), axis=2) - wl
+    si = jnp.broadcast_to(start_idx[:, None, :], (B, m, n))
+    left_rank = cl - jnp.take_along_axis(cl, si, axis=2)
+    pos = jnp.where(
+        closed_here[:, None, :], pos_closed[:, None, :],
+        jnp.where(wl, offs_l[:, None, :] + left_rank,
+                  offs_r[:, None, :] + in_block[:, None, :] - left_rank))
+    if B * m * n < 2 ** 31:
+        base = (jnp.arange(B * m, dtype=jnp.int32) * n).reshape(B, m, 1)
+        out = jnp.zeros((B * m * n,), ord_idx.dtype).at[
+            (pos + base).reshape(-1)].set(ord_idx.reshape(-1),
+                                          unique_indices=True
+                                          ).reshape(B, m, n)
+    else:
+        # the flat index space would overflow int32 (x64 is off); fall back
+        # to per-column scatters, whose indices stay < n
+        out = jax.vmap(jax.vmap(
+            lambda p, o: jnp.zeros_like(o).at[p].set(
+                o, unique_indices=True)))(pos, ord_idx)
+    return out if batched else out[0]
 
 
-@functools.partial(jax.jit, static_argnames=(
+_LEVEL_STATICS = (
     "Lp", "m_num", "m_cat", "max_arity", "num_classes", "m_prime", "usb",
     "impurity", "task", "min_records", "backend", "use_ord", "need_partition",
-    "supersplit_fn"))
-def _fused_level_step(num, cat, labels, sorted_vals, sorted_idx, ord_idx,
-                      leaf_of, w, stats, splittable_p, totals, row_counts,
-                      fkey, depth, *, Lp, m_num, m_cat, max_arity,
-                      num_classes, m_prime, usb, impurity, task, min_records,
-                      backend, use_ord, need_partition, supersplit_fn):
+    "supersplit_fn")
+
+# Dispatch/trace counters: tests assert the batched builder issues ONE
+# jitted level program per depth per tree-batch (and never falls back to
+# per-tree dispatches).  CALLS bump at dispatch time, TRACES at trace time.
+_STEP_CALLS = [0]          # per-tree fused level dispatches (build_tree)
+_BATCH_STEP_CALLS = [0]    # batched level dispatches (build_forest)
+_BATCH_STEP_TRACES = [0]   # distinct compilations of the batched program
+
+# Above this many row-state elements (T·m_num·n) the batched level step
+# switches from vmap (SIMD across trees) to lax.map (sequential trees, one
+# program) — the vmapped stack stops being cache-resident and measures
+# ~1.5x slower on CPU; see `_fused_level_step_batched`.
+_BATCH_VMAP_ELEMS = 1 << 19
+
+
+def _level_step_core(num, cat, labels, sorted_vals, sorted_idx, ord_idx,
+                     leaf_of, w, stats, splittable_p, totals, row_counts,
+                     fkey, depth, *, Lp, m_num, m_cat, max_arity,
+                     num_classes, m_prime, usb, impurity, task, min_records,
+                     backend, use_ord, need_partition, supersplit_fn,
+                     fused_tail=True):
     """One whole depth level of Alg. 2 as a single device program.
 
     Steps 3-7 fused: candidate feature draw, numeric + categorical
@@ -369,14 +415,23 @@ def _fused_level_step(num, cat, labels, sorted_vals, sorted_idx, ord_idx,
         leaf_of > 0,
         jnp.where(bits, new_left[leaf_of], new_right[leaf_of]), 0)
 
+    struct = {"best_feat": best_feat, "best_gain": best_gain,
+              "thr": thr_of_leaf, "mask": mask_of_leaf,
+              "will_split": will_split}
+    if not fused_tail:
+        # batched mode: the scatter-backed reductions (next totals, key
+        # counts, order partition) run OUTSIDE the tree-axis vmap, on a
+        # flattened (tree, segment) index space — vmap would lower them as
+        # batched-operand scatters, ~2x slower on CPU.  Hand back the
+        # per-tree pieces the wrapper needs.
+        part = (bits, new_left, new_right) if use_ord else None
+        return struct, new_leaf_of, ord_idx, None, part
+
     # next-level totals (node values / counts / splittable for depth+1)
     inb = (w > 0) & (new_leaf_of > 0)
     next_totals = jax.ops.segment_sum(jnp.where(inb[:, None], stats, 0.0),
                                       new_leaf_of, num_segments=2 * Lp + 1)
 
-    struct = {"best_feat": best_feat, "best_gain": best_gain,
-              "thr": thr_of_leaf, "mask": mask_of_leaf,
-              "will_split": will_split}
     if use_ord:
         key_counts = jax.ops.segment_sum(jnp.ones((n,), jnp.int32),
                                          new_leaf_of, num_segments=2 * Lp + 1)
@@ -387,6 +442,133 @@ def _fused_level_step(num, cat, labels, sorted_vals, sorted_idx, ord_idx,
                 ord_idx, lf_pos, bits, new_left, new_right, row_counts,
                 key_counts)
         else:       # the next level cannot split again (max depth reached)
+            new_ord_idx = ord_idx
+    else:
+        new_ord_idx = ord_idx
+    return struct, new_leaf_of, new_ord_idx, next_totals, None
+
+
+@functools.partial(jax.jit, static_argnames=_LEVEL_STATICS)
+def _fused_level_step(num, cat, labels, sorted_vals, sorted_idx, ord_idx,
+                      leaf_of, w, stats, splittable_p, totals, row_counts,
+                      fkey, depth, *, Lp, m_num, m_cat, max_arity,
+                      num_classes, m_prime, usb, impurity, task, min_records,
+                      backend, use_ord, need_partition, supersplit_fn):
+    """The per-tree fused level step (see `_level_step_core`)."""
+    struct, new_leaf_of, new_ord_idx, next_totals, _ = _level_step_core(
+        num, cat, labels, sorted_vals, sorted_idx, ord_idx, leaf_of, w,
+        stats, splittable_p, totals, row_counts, fkey, depth, Lp=Lp,
+        m_num=m_num, m_cat=m_cat, max_arity=max_arity,
+        num_classes=num_classes, m_prime=m_prime, usb=usb, impurity=impurity,
+        task=task, min_records=min_records, backend=backend, use_ord=use_ord,
+        need_partition=need_partition, supersplit_fn=supersplit_fn)
+    return struct, new_leaf_of, new_ord_idx, next_totals
+
+
+@functools.partial(jax.jit, static_argnames=_LEVEL_STATICS)
+def _fused_level_step_batched(num, cat, labels, sorted_vals, sorted_idx,
+                              ord_idx, leaf_of, w, stats, splittable_p,
+                              totals, row_counts, fkeys, depth, *, Lp, m_num,
+                              m_cat, max_arity, num_classes, m_prime, usb,
+                              impurity, task, min_records, backend, use_ord,
+                              need_partition, supersplit_fn):
+    """One depth level of EVERY tree in a batch as a single device program.
+
+    Trees are independent, so the whole fused level step — candidate draw,
+    numeric + categorical supersplit, winner argmax, condition evaluation,
+    leaf reassignment, next-level totals, incremental leaf-order partition —
+    is `vmap`ped over a leading tree axis T.  Shared read-only inputs (the
+    raw columns, labels, the forest-wide presorted order) broadcast; the
+    per-tree state batches:
+
+        num (n, m_num), cat (n, m_cat), labels (n,),
+        sorted_vals/sorted_idx (m_num, n)              [shared, in_axes=None]
+        ord_idx (T, m_num, n), leaf_of (T, n), w (T, n), stats (T, n, S),
+        splittable_p (T, Lp+1), totals (T, Lp+1, S), row_counts (T, Lp+1),
+        fkeys (T, key)                                 [batched, in_axes=0]
+
+    `Lp` is the batch-wide padded frontier width (max over the batch's
+    trees); trees with fewer open leaves — or none, having finished early —
+    are masked through `splittable_p`, which zeroes their candidate sets so
+    every gain is −inf and `will_split` stays False.  Because
+    `bagging.candidate_features` is padding-independent (per-leaf fold-in),
+    batching under the shared `Lp` is bit-identical per tree to the
+    per-tree `_fused_level_step` under that tree's own padding — the
+    property tests/test_forest_batch.py asserts against the reference
+    builder.  The Pallas paths (`split_scan`, `cat_hist`) batch through
+    `pallas_call`'s vmap rule, which folds the tree axis into the kernel
+    grid — still one device program.
+
+    Two lowering strategies, chosen statically by batch working-set size:
+
+      * SIMD across trees (`vmap` of the core, scatters flattened over the
+        (tree, segment) index space) when the batch's row state is
+        cache-resident — the fast path at small n, where dispatch overhead
+        dominates and cross-tree vectorization is free;
+      * sequential trees (`lax.map` of the per-tree core) when the stacked
+        state would thrash cache (measured ~1.5x slower under vmap on CPU
+        at T=16, n=100k) — still ONE device program per level, so the
+        T·D → D dispatch/host-sync amortization is kept at every size.
+
+    Returns the per-tree struct dict and next-level state, all with the
+    leading T axis; the host fetches the structs in ONE transfer per level.
+    """
+    _BATCH_STEP_TRACES[0] += 1
+    T, n = leaf_of.shape
+    if T * max(m_num, 1) * n > _BATCH_VMAP_ELEMS:
+        # cache-bound regime: run the trees sequentially INSIDE the program
+        core = functools.partial(
+            _level_step_core, Lp=Lp, m_num=m_num, m_cat=m_cat,
+            max_arity=max_arity, num_classes=num_classes, m_prime=m_prime,
+            usb=usb, impurity=impurity, task=task, min_records=min_records,
+            backend=backend, use_ord=use_ord, need_partition=need_partition,
+            supersplit_fn=supersplit_fn, fused_tail=True)
+
+        def body(args):
+            ord_t, leaf_t, w_t, stats_t, sp_t, tot_t, rc_t, fk_t = args
+            s, nl, no, nt, _ = core(num, cat, labels, sorted_vals,
+                                    sorted_idx, ord_t, leaf_t, w_t, stats_t,
+                                    sp_t, tot_t, rc_t, fk_t, depth)
+            return s, nl, no, nt
+
+        return jax.lax.map(body, (ord_idx, leaf_of, w, stats, splittable_p,
+                                  totals, row_counts, fkeys))
+
+    core = functools.partial(
+        _level_step_core, Lp=Lp, m_num=m_num, m_cat=m_cat,
+        max_arity=max_arity, num_classes=num_classes, m_prime=m_prime,
+        usb=usb, impurity=impurity, task=task, min_records=min_records,
+        backend=backend, use_ord=use_ord, need_partition=need_partition,
+        supersplit_fn=supersplit_fn, fused_tail=False)
+    struct, new_leaf_of, _, _, part = jax.vmap(
+        core, in_axes=(None, None, None, None, None,
+                       0, 0, 0, 0, 0, 0, 0, 0, None))(
+        num, cat, labels, sorted_vals, sorted_idx, ord_idx, leaf_of, w,
+        stats, splittable_p, totals, row_counts, fkeys, depth)
+
+    # scatter-backed tail on the FLAT (tree, segment) index space: per-tree
+    # results are bit-identical (each tree's rows accumulate in the same
+    # order as in the per-tree program) but the scatters lower ~2x faster
+    # than their vmapped form on CPU
+    L2 = 2 * Lp + 1
+    flat_ids = (new_leaf_of
+                + jnp.arange(T, dtype=jnp.int32)[:, None] * L2).reshape(-1)
+    inb = (w > 0) & (new_leaf_of > 0)
+    next_totals = jax.ops.segment_sum(
+        jnp.where(inb.reshape(-1)[:, None], stats.reshape(T * n, -1), 0.0),
+        flat_ids, num_segments=T * L2).reshape(T, L2, -1)
+    if use_ord:
+        key_counts = jax.ops.segment_sum(
+            jnp.ones((T * n,), jnp.int32), flat_ids,
+            num_segments=T * L2).reshape(T, L2)
+        struct = dict(struct, key_counts=key_counts)
+        if need_partition:
+            bits, new_left, new_right = part
+            lf_pos = jax.vmap(lambda lf, oi: lf[oi])(leaf_of, ord_idx[:, 0])
+            new_ord_idx = _partition_leaf_order(
+                ord_idx, lf_pos, bits, new_left, new_right, row_counts,
+                key_counts)
+        else:
             new_ord_idx = ord_idx
     else:
         new_ord_idx = ord_idx
@@ -408,6 +590,81 @@ def _tree_setup(sorted_vals, arities, labels, params):
     return n, m_num, m_cat, m, max_arity, m_prime
 
 
+class _NodeAccum:
+    """Host-side flat-tree accumulator (Alg. 2 step 8 bookkeeping).
+
+    One per tree; the builders append nodes level by level and
+    `_assemble_tree` freezes the lists into the numpy `Tree` arrays.
+    """
+
+    def __init__(self, num_classes: int, task: str):
+        self.feature: list = []
+        self.threshold: list = []
+        self.is_cat: list = []
+        self.cat_mask: list = []
+        self.children: list = []
+        self.value: list = []
+        self.n_node: list = []
+        self.gain: list = []
+        self.depth: list = []
+        self._C = max(num_classes, 2) if task == "classification" else 1
+
+    def new_node(self, depth: int) -> int:
+        self.feature.append(-1)
+        self.threshold.append(0.0)
+        self.is_cat.append(False)
+        self.cat_mask.append(None)
+        self.children.append([-1, -1])
+        self.value.append(np.zeros(self._C, np.float32))
+        self.n_node.append(0.0)
+        self.gain.append(0.0)
+        self.depth.append(depth)
+        return len(self.feature) - 1
+
+    def set_value(self, node: int, totals_row: np.ndarray, count: float,
+                  task: str) -> None:
+        """Node value from its leaf-totals row (distribution / mean)."""
+        self.n_node[node] = float(count)
+        if task == "classification":
+            tot = max(count, 1e-12)
+            self.value[node] = (totals_row / tot).astype(np.float32)
+        else:
+            wsum = max(totals_row[0], 1e-12)
+            self.value[node] = np.array([totals_row[1] / wsum], np.float32)
+
+
+def _grow_level(acc: _NodeAccum, open_nodes: list, host: dict, L: int,
+                m_num: int, depth: int) -> tuple[list, bool]:
+    """Alg. 2 step 8 for ONE tree: grow the flat tree from a level struct.
+
+    `host` holds the fetched per-leaf arrays of one tree (best_feat /
+    best_gain / thr / mask / will_split, each (Lp+1,)-indexed by leaf id).
+    Shared by `build_tree` and `build_forest` so their bookkeeping cannot
+    drift.  Returns (next level's open node ids, whether any leaf split).
+    """
+    bf, bg = host["best_feat"], host["best_gain"]
+    thr, mask, ws = host["thr"], host["mask"], host["will_split"]
+    next_open: list[int] = []
+    any_split = False
+    for h in range(1, L + 1):
+        if not ws[h]:
+            continue
+        node = open_nodes[h - 1]
+        j = int(bf[h])
+        any_split = True
+        acc.feature[node] = j
+        acc.gain[node] = float(bg[h])
+        if j < m_num:
+            acc.threshold[node] = float(thr[h])
+        else:
+            acc.is_cat[node] = True
+            acc.cat_mask[node] = mask[h].copy()
+        lc, rc = acc.new_node(depth + 1), acc.new_node(depth + 1)
+        acc.children[node] = [lc, rc]
+        next_open.extend([lc, rc])
+    return next_open, any_split
+
+
 def build_tree(
     *,
     num: jnp.ndarray, cat: jnp.ndarray, labels: jnp.ndarray,
@@ -417,16 +674,41 @@ def build_tree(
     collect_stats: bool = False,
     supersplit_fn=None,
 ) -> tuple[Tree, list[LevelStats]]:
-    """Train one tree with ONE fused jitted device program per depth level.
+    """Train ONE tree with one fused jitted device program per depth level.
+
+    Args (shapes):
+      num / cat:     (n, m_num) float32 / (n, m_cat) int32 raw columns.
+      labels:        (n,) int32 class ids (classification) or float32
+                     targets (regression).
+      sorted_vals / sorted_idx: (m_num, n) per-column presorted values and
+                     row indices (presort.presort_columns) — computed once
+                     per forest and shared by every tree.
+      arities:       per categorical column arity; categories are
+                     0..arity-1, padded to max(arities) inside the step.
+      num_classes:   stat width C for classification (S = C); regression
+                     uses S = 3 ([w, wy, wy²]) regardless.
+      params:        TreeParams; `params.backend` picks the numeric
+                     supersplit engine — "segment" (default; incrementally
+                     maintained (leaf, value)-sorted layout, no per-level
+                     sort), "scan" (faithful Alg. 1 sequential pass) or
+                     "kernel" (Pallas split_scan/cat_hist; interpret mode
+                     off-TPU).
+      seed/tree_idx: seeded bagging + candidate draws (paper §2.2) — all
+                     randomness is a pure function of these two.
+      supersplit_fn: optional replacement for the local numeric supersplit
+                     (distributed.py passes the shard_map'd search; it
+                     composes inside the fused jit so the same program
+                     lowers for the mesh).
 
     Produces exactly the trees of `build_tree_reference` (asserted by
     tests/test_fused_level.py) while the host does bookkeeping only: per
     level it uploads the tiny (splittable, totals) pair and fetches one
-    small per-leaf struct; all row-indexed state stays on device.
+    small per-leaf struct; all row-indexed state stays on device.  To train
+    many trees, prefer `build_forest`, which runs this same level step
+    vmapped over a whole tree batch.
 
-    `supersplit_fn`, when given, replaces the local numeric supersplit search
-    (used by distributed.py to run it under shard_map on the mesh — it
-    composes inside the fused jit).
+    Returns (Tree, [LevelStats]) — the flat host-side tree and, when
+    `collect_stats`, the per-level paper-Table-1 counters.
     """
     n, m_num, m_cat, m, max_arity, m_prime = _tree_setup(
         sorted_vals, arities, labels, params)
@@ -439,19 +721,8 @@ def build_tree(
     def cnt_np(t):
         return t.sum(-1) if task == "classification" else t[..., 0]
 
-    # node storage (host lists)
-    feature, threshold, is_cat_l, cat_mask_l = [], [], [], []
-    children, value, n_node, gain_l, depth_l = [], [], [], [], []
-
-    def new_node(depth):
-        feature.append(-1); threshold.append(0.0); is_cat_l.append(False)
-        cat_mask_l.append(None); children.append([-1, -1])
-        value.append(np.zeros(max(num_classes, 2) if task == "classification" else 1,
-                              np.float32))
-        n_node.append(0.0); gain_l.append(0.0); depth_l.append(depth)
-        return len(feature) - 1
-
-    root = new_node(0)
+    acc = _NodeAccum(num_classes, task)
+    root = acc.new_node(0)
     open_nodes = [root]                       # leaf id h (1-based) -> node id
     leaf_of = jnp.ones((n,), jnp.int32)       # all samples at the root
     stats_log: list[LevelStats] = []
@@ -487,13 +758,7 @@ def build_tree(
             row_counts_np = cur_rc
         counts = cnt_np(totals_np)
         for h, node in enumerate(open_nodes, start=1):
-            n_node[node] = float(counts[h])
-            if task == "classification":
-                tot = max(counts[h], 1e-12)
-                value[node] = (totals_np[h] / tot).astype(np.float32)
-            else:
-                wsum = max(totals_np[h, 0], 1e-12)
-                value[node] = np.array([totals_np[h, 1] / wsum], np.float32)
+            acc.set_value(node, totals_np[h], counts[h], task)
 
         at_max_depth = depth >= params.max_depth
         splittable = np.array(
@@ -504,6 +769,7 @@ def build_tree(
         splittable_p = np.concatenate([[False], splittable])
 
         # the whole level on device: one dispatch, one small struct back
+        _STEP_CALLS[0] += 1
         struct, leaf_of, ord_idx, next_totals = _fused_level_step(
             num, cat, labels,
             jnp.zeros((0, 0), jnp.float32) if use_ord else sorted_vals,
@@ -523,26 +789,8 @@ def build_tree(
             row_counts_np = host["key_counts"]
 
         # Alg. 2 step 8: the host bookkeeping — grow the flat tree
-        bf, bg = host["best_feat"], host["best_gain"]
-        thr, mask, ws = host["thr"], host["mask"], host["will_split"]
-        next_open: list[int] = []
-        any_split = False
-        for h in range(1, L + 1):
-            if not ws[h]:
-                continue
-            node = open_nodes[h - 1]
-            j = int(bf[h])
-            any_split = True
-            feature[node] = j
-            gain_l[node] = float(bg[h])
-            if j < m_num:
-                threshold[node] = float(thr[h])
-            else:
-                is_cat_l[node] = True
-                cat_mask_l[node] = mask[h].copy()
-            lc, rc = new_node(depth + 1), new_node(depth + 1)
-            children[node] = [lc, rc]
-            next_open.extend([lc, rc])
+        next_open, any_split = _grow_level(acc, open_nodes, host, L, m_num,
+                                           depth)
 
         if collect_stats:
             open_w = float(counts[1:L + 1].sum())
@@ -559,47 +807,222 @@ def build_tree(
         open_nodes = next_open
 
         # Sprint-style pruning switch (paper §3): compact rows in closed
-        # leaves once they dominate (host-side, rare; exact — see reference)
+        # leaves once they dominate.  Device-resident: under the
+        # leaf-ordered layout the closed rows are the CONTIGUOUS PREFIX of
+        # every column's order (new leaf id 0 sorts first), so compaction is
+        # a per-column slice + index remap — no host pass, no per-column
+        # numpy loop.  The closed count itself is already on the host
+        # (row_counts[0] from the level struct), so the trigger costs zero
+        # extra transfers.
         if params.prune_closed_frac < 1.0 and n > 0:
-            lf_np = np.asarray(leaf_of)
-            keep = lf_np > 0
-            frac_closed = 1.0 - keep.mean()
-            if frac_closed >= params.prune_closed_frac and keep.any() \
-                    and keep.sum() < n:
-                remap = np.cumsum(keep) - 1
-                n_new = int(keep.sum())
+            # the ord layout is only current when this level partitioned it
+            # (the last level before max_depth skips the partition; the loop
+            # terminates right after, so skipping the prune there is free)
+            order_current = not use_ord or (depth + 1 < params.max_depth)
+            closed = (int(row_counts_np[0]) if use_ord
+                      else int(jnp.sum(leaf_of == 0)))
+            if closed / n >= params.prune_closed_frac and 0 < closed < n \
+                    and order_current:
+                n_new = n - closed
+                keep = leaf_of > 0
+                remap = jnp.cumsum(keep.astype(jnp.int32)) - 1
+                keep_idx = jnp.nonzero(keep, size=n_new)[0]
                 if use_ord:
-                    oi = np.asarray(ord_idx)
-                    kept_cols = keep[oi]
-                    new_oi = np.empty((m_num, n_new), np.int32)
-                    for j in range(m_num):
-                        new_oi[j] = remap[oi[j][kept_cols[j]]]
-                    ord_idx = jnp.asarray(new_oi)
+                    # closed rows = positions [0, closed) in EVERY column
+                    ord_idx = jnp.take(remap, ord_idx[:, closed:])
                     row_counts_np = row_counts_np.copy()
                     row_counts_np[0] = 0      # the dropped (closed) rows
                 elif m_num:
-                    idx_np = np.asarray(sorted_idx)
-                    vals_np = np.asarray(sorted_vals)
-                    kept_cols = keep[idx_np]
-                    new_idx = np.empty((m_num, n_new), np.int32)
-                    new_vals = np.empty((m_num, n_new), np.float32)
-                    for j in range(m_num):
-                        sel = kept_cols[j]
-                        new_idx[j] = remap[idx_np[j][sel]]
-                        new_vals[j] = vals_np[j][sel]
-                    sorted_idx = jnp.asarray(new_idx)
-                    sorted_vals = jnp.asarray(new_vals)
-                num = num[jnp.asarray(keep)] if num.size else num
-                cat = cat[jnp.asarray(keep)] if cat.size else cat
-                stats = stats[jnp.asarray(keep)]
-                w = w[jnp.asarray(keep)]
-                labels = labels[jnp.asarray(keep)]
-                leaf_of = jnp.asarray(lf_np[keep])
+                    # filter the presorted order (stability preserves it):
+                    # every column keeps the same n_new rows, so the flat
+                    # row-major nonzero is (m_num, n_new) column blocks
+                    kept_cols = jnp.take(keep, sorted_idx)
+                    flat = jnp.nonzero(kept_cols.reshape(-1),
+                                       size=m_num * n_new)[0]
+                    sorted_idx = jnp.take(
+                        remap, sorted_idx.reshape(-1)[flat]
+                    ).reshape(m_num, n_new)
+                    sorted_vals = sorted_vals.reshape(-1)[flat].reshape(
+                        m_num, n_new)
+                num = num[keep_idx]
+                cat = cat[keep_idx]
+                stats = stats[keep_idx]
+                w = w[keep_idx]
+                labels = labels[keep_idx]
+                leaf_of = leaf_of[keep_idx]
                 n = n_new
 
-    return _assemble_tree(feature, threshold, is_cat_l, cat_mask_l, children,
-                          value, n_node, gain_l, depth_l, max_arity, m_num,
-                          task), stats_log
+    return _assemble_tree(acc, max_arity, m_num, task), stats_log
+
+
+# ---------------------------------------------------------------------------
+# The batched forest builder (vmap over tree state — ROADMAP
+# "multi-tree level batching": the manager's parallel tree-builder queries
+# answered by ONE device, DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+def build_forest(
+    *,
+    num: jnp.ndarray, cat: jnp.ndarray, labels: jnp.ndarray,
+    sorted_vals: jnp.ndarray, sorted_idx: jnp.ndarray,
+    arities: tuple[int, ...], num_classes: int,
+    params: TreeParams, seed: int, tree_indices,
+    collect_stats: bool = False,
+) -> tuple[list[Tree], list[list[LevelStats]]]:
+    """Train a BATCH of trees with one fused jitted program per depth level.
+
+    Trees are independent, so the whole fused level step is vmapped over a
+    leading tree axis (DESIGN.md §3): per-tree PRNG keys, per-tree bootstrap
+    row weights, and the per-tree leaf frontier padded to the batch maximum
+    `Lp`, with trees that finish early masked via all-False `splittable`
+    rows.  For T trees of depth D this issues D device programs total where
+    the per-tree builder issues T·D — the dispatch/host-sync amortization
+    that fills the machine at small-to-medium n.
+
+    Bit-parity: each returned tree is IDENTICAL to what
+    `build_tree(..., tree_idx=t)` — and hence `build_tree_reference` —
+    produces for the same (seed, t), for every backend.  Two properties
+    carry this: `bagging.candidate_features` draws per leaf row (so the
+    batch-max padding does not perturb a tree's own draws), and the vmapped
+    level step performs the same per-tree reductions in the same order as
+    the unbatched one.  Asserted by tests/test_forest_batch.py.
+
+    Args are as `build_tree`, except `tree_indices` (an iterable of tree
+    ids, each seeding its own bagging/candidate streams) replaces
+    `tree_idx`, and `supersplit_fn`/`prune_closed_frac` are not supported —
+    `RandomForest.fit` routes those configurations to the per-tree builder.
+
+    Returns (trees, stats_logs), parallel lists over `tree_indices`.
+    """
+    n, m_num, m_cat, m, max_arity, m_prime = _tree_setup(
+        sorted_vals, arities, labels, params)
+    task = params.task
+    tidx = [int(t) for t in tree_indices]
+    T = len(tidx)
+    assert T >= 1
+    assert params.prune_closed_frac >= 1.0, \
+        "row pruning changes n per tree; use the per-tree builder"
+
+    # per-tree stacked device state: bootstrap weights, stats, PRNG keys
+    w = bagging.bag_counts_forest(seed, jnp.asarray(tidx, jnp.int32), n,
+                                  params.bagging)                   # (T, n)
+    stats = jax.vmap(
+        lambda ww: splits.row_stats(labels, ww, num_classes, task))(w)
+    base_key = jax.random.PRNGKey(seed ^ 0x5EED)
+    fkeys = jax.vmap(lambda t: jax.random.fold_in(base_key, t))(
+        jnp.asarray(tidx, jnp.int32))
+
+    def cnt_np(t):
+        return t.sum(-1) if task == "classification" else t[..., 0]
+
+    accs = [_NodeAccum(num_classes, task) for _ in range(T)]
+    open_nodes = [[a.new_node(0)] for a in accs]  # per tree: leaf h -> node
+    done = [False] * T                    # finished trees stay masked
+    leaf_of = jnp.ones((T, n), jnp.int32)
+    stats_logs: list[list[LevelStats]] = [[] for _ in range(T)]
+
+    use_ord = params.backend == "segment" and m_num > 0
+    # every tree starts at the root, where value order == (leaf, value)
+    # order, so the initial per-tree leaf order is the shared presort
+    ord_idx = (jnp.broadcast_to(sorted_idx[None], (T,) + sorted_idx.shape)
+               if use_ord else jnp.zeros((T, 0, 0), jnp.int32))
+
+    totals_np = None                      # (T, width, S), host
+    row_counts_np = None                  # (T, width), host (ord backend)
+    for depth in range(params.max_depth + 1):
+        Ls = [0 if done[t] else len(open_nodes[t]) for t in range(T)]
+        if max(Ls) == 0:
+            break
+        Lp = _pad_leaves(max(Ls), params.leaf_pad)  # batch-max frontier
+
+        # carry the leaf totals into the new padding (root: compute once)
+        if totals_np is None:
+            totals_np = np.asarray(jax.vmap(
+                lambda lf, st, ww: _leaf_totals(lf, st, ww, Lp))(
+                    leaf_of, stats, w))
+            row_counts_np = np.zeros((T, Lp + 1), np.int32)
+            row_counts_np[:, 1] = n
+        else:
+            cur = np.zeros((T, Lp + 1, totals_np.shape[-1]), np.float32)
+            k = min(Lp + 1, totals_np.shape[1])   # rows past a tree's own
+            cur[:, :k] = totals_np[:, :k]         # frontier are all zero
+            totals_np = cur
+            cur_rc = np.zeros((T, Lp + 1), np.int32)
+            k = min(Lp + 1, row_counts_np.shape[1])
+            cur_rc[:, :k] = row_counts_np[:, :k]
+            row_counts_np = cur_rc
+        counts = cnt_np(totals_np)                # (T, Lp+1)
+
+        # per-tree node values + the splittable frontier mask
+        at_max_depth = depth >= params.max_depth
+        splittable_p = np.zeros((T, Lp + 1), bool)
+        for t in range(T):
+            if done[t]:
+                continue
+            for h, node in enumerate(open_nodes[t], start=1):
+                accs[t].set_value(node, totals_np[t, h], counts[t, h], task)
+            if at_max_depth:
+                done[t] = True                    # values written; no splits
+                continue
+            sp = counts[t, 1:Ls[t] + 1] >= 2 * params.min_records
+            if not sp.any():
+                done[t] = True
+                continue
+            splittable_p[t, 1:Ls[t] + 1] = sp
+        if not splittable_p.any():
+            break
+
+        # the whole level of the whole batch on device: ONE dispatch,
+        # one stacked struct back
+        _BATCH_STEP_CALLS[0] += 1
+        struct, leaf_of, ord_idx, next_totals = _fused_level_step_batched(
+            num, cat, labels,
+            jnp.zeros((0, 0), jnp.float32) if use_ord else sorted_vals,
+            jnp.zeros((0, 0), jnp.int32) if use_ord else sorted_idx,
+            ord_idx, leaf_of, w, stats,
+            jnp.asarray(splittable_p), jnp.asarray(totals_np),
+            jnp.asarray(row_counts_np), fkeys,
+            jnp.int32(depth), Lp=Lp, m_num=m_num, m_cat=m_cat,
+            max_arity=max_arity, num_classes=num_classes, m_prime=m_prime,
+            usb=params.usb, impurity=params.impurity, task=task,
+            min_records=params.min_records, backend=params.backend,
+            use_ord=use_ord,
+            need_partition=use_ord and depth + 1 < params.max_depth,
+            supersplit_fn=None)
+        host, totals_np = jax.device_get((struct, next_totals))
+        if use_ord:
+            row_counts_np = host["key_counts"]
+
+        # Alg. 2 step 8 per tree: grow the flat trees from the structs
+        for t in range(T):
+            if done[t]:
+                continue
+            L = Ls[t]
+            host_t = {k: host[k][t] for k in ("best_feat", "best_gain",
+                                              "thr", "mask", "will_split")}
+            next_open, any_split = _grow_level(accs[t], open_nodes[t],
+                                               host_t, L, m_num, depth)
+
+            if collect_stats:
+                # per-tree accounting under the tree's OWN padding, so the
+                # counters match a per-tree build of the same tree
+                Lp_t = _pad_leaves(L, params.leaf_pad)
+                open_w = float(counts[t, 1:L + 1].sum())
+                passes = int(min(m_prime * (1 if params.usb else L), m))
+                stats_logs[t].append(LevelStats(
+                    depth=depth, open_leaves=L,
+                    network_bits_bitmap=int(open_w),
+                    network_bits_supersplit=int(m * (Lp_t + 1) * 64),
+                    class_list_bits=class_list.storage_bits(n, L),
+                    feature_passes=passes, rows_scanned=n * passes))
+
+            if any_split:
+                open_nodes[t] = next_open
+            else:
+                done[t] = True
+
+    return ([_assemble_tree(a, max_arity, m_num, task) for a in accs],
+            stats_logs)
 
 
 # ---------------------------------------------------------------------------
@@ -630,19 +1053,8 @@ def build_tree_reference(
     cnt = splits.count_fn(task)
     fkey = jax.random.fold_in(jax.random.PRNGKey(seed ^ 0x5EED), tree_idx)
 
-    # node storage (host lists)
-    feature, threshold, is_cat_l, cat_mask_l = [], [], [], []
-    children, value, n_node, gain_l, depth_l = [], [], [], [], []
-
-    def new_node(depth):
-        feature.append(-1); threshold.append(0.0); is_cat_l.append(False)
-        cat_mask_l.append(None); children.append([-1, -1])
-        value.append(np.zeros(max(num_classes, 2) if task == "classification" else 1,
-                              np.float32))
-        n_node.append(0.0); gain_l.append(0.0); depth_l.append(depth)
-        return len(feature) - 1
-
-    root = new_node(0)
+    acc = _NodeAccum(num_classes, task)
+    root = acc.new_node(0)
     open_nodes = [root]                       # leaf id h (1-based) -> node id
     leaf_of = jnp.ones((n,), jnp.int32)       # all samples at the root
     stats_log: list[LevelStats] = []
@@ -657,13 +1069,7 @@ def build_tree_reference(
         totals = np.asarray(_leaf_totals(leaf_of, stats, w, Lp))  # (Lp+1, S)
         counts = np.asarray(cnt(jnp.asarray(totals)))
         for h, node in enumerate(open_nodes, start=1):
-            n_node[node] = float(counts[h])
-            if task == "classification":
-                tot = max(counts[h], 1e-12)
-                value[node] = (totals[h] / tot).astype(np.float32)
-            else:
-                wsum = max(totals[h, 0], 1e-12)
-                value[node] = np.array([totals[h, 1] / wsum], np.float32)
+            acc.set_value(node, totals[h], counts[h], task)
 
         at_max_depth = depth >= params.max_depth
         splittable = np.array(
@@ -724,20 +1130,20 @@ def build_tree_reference(
                 continue
             j = int(best_feat[h])
             any_split = True
-            feature[node] = j
-            gain_l[node] = float(best_gain[h])
+            acc.feature[node] = j
+            acc.gain[node] = float(best_gain[h])
             feat_of_leaf[h] = j
             if j < m_num:
-                threshold[node] = float(all_thr[j, h])
+                acc.threshold[node] = float(all_thr[j, h])
                 thr_of_leaf[h] = all_thr[j, h]
             else:
-                is_cat_l[node] = True
+                acc.is_cat[node] = True
                 iscat_of_leaf[h] = True
                 cm = all_masks[j - m_num, h]
-                cat_mask_l[node] = cm.copy()
+                acc.cat_mask[node] = cm.copy()
                 mask_of_leaf[h] = cm
-            lc, rc = new_node(depth + 1), new_node(depth + 1)
-            children[node] = [lc, rc]
+            lc, rc = acc.new_node(depth + 1), acc.new_node(depth + 1)
+            acc.children[node] = [lc, rc]
             next_open.extend([lc, rc])
             new_left[h] = len(next_open) - 1               # 1-based ids below
             new_right[h] = len(next_open)
@@ -793,28 +1199,25 @@ def build_tree_reference(
                 leaf_of = jnp.asarray(lf_np[keep])
                 n = n_new
 
-    return _assemble_tree(feature, threshold, is_cat_l, cat_mask_l, children,
-                          value, n_node, gain_l, depth_l, max_arity, m_num,
-                          task), stats_log
+    return _assemble_tree(acc, max_arity, m_num, task), stats_log
 
 
-def _assemble_tree(feature, threshold, is_cat_l, cat_mask_l, children, value,
-                   n_node, gain_l, depth_l, max_arity, m_num, task) -> Tree:
-    N = len(feature)
+def _assemble_tree(acc: _NodeAccum, max_arity, m_num, task) -> Tree:
+    N = len(acc.feature)
     cat_mask_arr = np.zeros((N, max_arity), bool)
-    for i, cm in enumerate(cat_mask_l):
+    for i, cm in enumerate(acc.cat_mask):
         if cm is not None:
             cat_mask_arr[i, :len(cm)] = cm
     return Tree(
-        feature=np.asarray(feature, np.int32),
-        threshold=np.asarray(threshold, np.float32),
-        is_cat=np.asarray(is_cat_l, bool),
+        feature=np.asarray(acc.feature, np.int32),
+        threshold=np.asarray(acc.threshold, np.float32),
+        is_cat=np.asarray(acc.is_cat, bool),
         cat_mask=cat_mask_arr,
-        children=np.asarray(children, np.int32),
-        value=np.stack(value).astype(np.float32),
-        n_node=np.asarray(n_node, np.float32),
-        gain=np.asarray(gain_l, np.float32),
-        depth=np.asarray(depth_l, np.int32),
+        children=np.asarray(acc.children, np.int32),
+        value=np.stack(acc.value).astype(np.float32),
+        n_node=np.asarray(acc.n_node, np.float32),
+        gain=np.asarray(acc.gain, np.float32),
+        depth=np.asarray(acc.depth, np.int32),
         m_num=m_num, task=task)
 
 

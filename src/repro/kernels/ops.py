@@ -10,6 +10,12 @@ Both entry points take the stat dimension from the caller (`num_classes`):
 deriving it from `labels.max()` would be a per-call device->host sync in the
 middle of the level loop (and is impossible under jit).  The seed behaviour
 is kept as an eager-only fallback when `num_classes` is omitted.
+
+Both entry points also batch over a leading TREE axis: `tree.build_forest`
+vmaps them over per-tree (leaf_of, w) state, and `pallas_call`'s batching
+rule folds that axis into the kernel grid — one kernel launch for the
+whole tree batch, bit-identical per tree to the unbatched call
+(tests/test_forest_batch.py exercises this through the `kernel` backend).
 """
 from __future__ import annotations
 
