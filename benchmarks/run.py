@@ -13,7 +13,7 @@ import time
 def main() -> None:
     from benchmarks import (fig1_auc_scaling, fig2_time_scaling,
                             fig3_depth_metrics, forest_batch_bench,
-                            kernel_bench, level_step_bench,
+                            hist_mode_bench, kernel_bench, level_step_bench,
                             table1_complexity)
     args = [a for a in sys.argv[1:] if not a.startswith("--")]
     flags = {a for a in sys.argv[1:] if a.startswith("--")}
@@ -35,6 +35,9 @@ def main() -> None:
         # writes BENCH_forest_batch.json (batched vs per-tree forest fit);
         # honours --smoke (seconds-scale) and --full (adds the 250k point)
         "forest": lambda: forest_batch_bench.run(full=full, smoke=smoke),
+        # writes BENCH_hist_mode.json (exact vs PLANET-style histogram
+        # mode: AUC delta + fit-wall matrix); honours --smoke
+        "hist": lambda: hist_mode_bench.run(smoke=smoke),
     }
     print("name,us_per_call,derived")
     for name, fn in benches.items():

@@ -146,6 +146,60 @@ def make_2d_sharded_supersplit(mesh, feature_axis: str = "model",
 
 
 # ---------------------------------------------------------------------------
+# Histogram (PLANET-style) supersplit: psum of (bins × stats) tables
+# ---------------------------------------------------------------------------
+
+def make_hist_sharded_supersplit(mesh, feature_axis: str = "model",
+                                 row_axis: Optional[str] = "data"):
+    """Approximate supersplit_fn for `split_mode="hist"` (DESIGN.md §6).
+
+    Columns are sharded over `feature_axis` (the paper's splitter layout);
+    ROWS — plain row order, no presorted state — are sharded over `row_axis`
+    together with the class list / bag weights / stats.  Each shard
+    scatter-adds its local per-leaf (bin × stat) count table and a single
+    `psum` over `row_axis` merges them: (L+1)·B·S floats per column per
+    level, independent of n.
+
+    This is the paper's network-complexity contrast made executable: the
+    PLANET-style histogram merge is a fixed-size reduction of count tables,
+    whereas the exact 2-D supersplit (make_2d_sharded_supersplit) must
+    all_gather per-shard scan state (prefix histograms + last-seen values
+    + per-shard bests) so every row shard can resume the EXACT pass where
+    its predecessor stopped.  The price of the cheap merge is that only
+    `num_bins` thresholds per column are ever considered.
+
+    `row_axis=None` gives the column-sharded-only variant (rows replicated,
+    no psum).  Returns fn(bin_of, bin_edges, leaf_of, w, stats, cand, Lp,
+    impurity, task, min_records) -> (gains, thresholds), each (m, L+1) —
+    the hist-mode supersplit_fn signature of `tree._level_step_core`.  The
+    bucket count is read off bin_edges (shape (m, num_bins)), so the fn
+    always agrees with the TreeParams that produced the bucket state.
+    """
+
+    def fn(bin_of, bin_edges, leaf_of, w, stats, cand, Lp,
+           impurity, task, min_records):
+        def local(bo, be, cl, lf, ww, st):
+            def per_col(b, e, c):
+                table = splits.categorical_count_table(
+                    b, lf, ww, st, Lp, e.shape[0])
+                if row_axis is not None:
+                    table = jax.lax.psum(table, row_axis)    # the merge
+                return splits.best_numeric_split_histogram(
+                    table, e, c, impurity, task, min_records)
+            return jax.vmap(per_col)(bo, be, cl)
+
+        sharded = _shmap(
+            local, mesh,
+            in_specs=(P(feature_axis, row_axis), P(feature_axis, None),
+                      P(feature_axis, None), P(row_axis), P(row_axis),
+                      P(row_axis, None)),
+            out_specs=(P(feature_axis, None), P(feature_axis, None)))
+        return sharded(bin_of, bin_edges, cand, leaf_of, w, stats)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
 # 1-bit condition broadcast (Alg. 2 steps 5/7) under the mesh
 # ---------------------------------------------------------------------------
 

@@ -139,7 +139,11 @@ class RandomForest:
     Construction params:
       params:     `tree.TreeParams` — depth/impurity/backend etc.; see its
                   fields for the paper hyper-parameters (m', min_records,
-                  USB, Sprint pruning).
+                  USB, Sprint pruning).  `split_mode="hist"` trains the
+                  PLANET-style approximate baseline (<= num_bins threshold
+                  buckets per numeric column, DESIGN.md §6) on the same
+                  fused level machinery; `"exact"` (default) is the
+                  paper's exact search.
       num_trees:  forest size T.
       seed:       forest seed; ALL randomness (bagging, candidate features)
                   is a pure function of (seed, tree index) — the paper's
@@ -210,6 +214,12 @@ class RandomForest:
                   arities=ds.arities, num_classes=ds.num_classes,
                   params=self.params, seed=self.seed,
                   collect_stats=collect_stats)
+        if self.params.split_mode == "hist" and ds.m_num:
+            # hist mode: quantize once per forest (the PLANET-style fixed
+            # bucket budget), shared by every tree/level like the presort
+            bin_of, bin_edges = presort.quantize(ds.num, sorted_vals,
+                                                 self.params.num_bins)
+            kw.update(bin_of=bin_of, bin_edges=bin_edges)
         tb = self._resolve_tree_batch(ds)
         if supersplit_fn is not None or self.params.prune_closed_frac < 1.0:
             tb = 1                      # per-tree-only configurations

@@ -8,16 +8,25 @@ training of each individual tree is still distributed."
 Each boosting round fits a regression tree (variance impurity) to the
 current pseudo-residuals with the SAME supersplit engine — the presort,
 class list, seeded candidate draws and one-pass-per-level structure are all
-shared.  Losses: squared error (regression) and logistic (binary
+shared (including `split_mode="hist"`, the PLANET-style approximate
+baseline).  Losses: squared error (regression) and logistic (binary
 classification).
+
+Inference stacks the fitted rounds into a `forest.PackedForest`:
+`predict_raw` is ONE jitted device call (vmap-over-rounds descent + the
+scaled sum + base score fused), not a host-side tree loop.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import forest as forest_lib
 from repro.core import presort, tree as tree_lib
 from repro.core.dataset import TabularDataset
 
@@ -31,7 +40,31 @@ class GBTParams:
     num_candidates: int | None = None   # None = all features (GBT default)
     loss: str = "squared"               # squared | logistic
     backend: str = "segment"
+    split_mode: str = "exact"           # exact | hist (PLANET baseline)
+    num_bins: int = 255                 # hist-mode bucket budget per column
     seed: int = 0
+
+
+# trace counter: tests assert predict_raw compiles ONCE for a whole model
+# (no per-round retraces) — mirrors forest._PREDICT_TRACES
+_RAW_TRACES = [0]
+
+
+@functools.partial(jax.jit, static_argnames=("m_num", "iters"))
+def _gbt_predict_raw_jit(feature, threshold, is_cat, cat_mask, children,
+                         value, num, cat, base_score, learning_rate,
+                         m_num, iters):
+    """base + lr · Σ_rounds tree_t(x), one device program for all rounds.
+
+    Reuses the stacked-forest descent (forest._forest_predict_impl, a vmap
+    over the round axis of the packed arrays); the scaled reduction over
+    rounds stays inside the same jit.
+    """
+    _RAW_TRACES[0] += 1
+    preds = forest_lib._forest_predict_impl(
+        feature, threshold, is_cat, cat_mask, children, value, num, cat,
+        m_num, iters, reduce_mean=False)                     # (T, B, 1)
+    return base_score + learning_rate * preds[:, :, 0].sum(axis=0)
 
 
 @dataclasses.dataclass
@@ -43,20 +76,26 @@ class GBTModel:
     pseudo-residuals with the same fused one-program-per-level builder as
     `RandomForest` — rounds are sequential (tree t+1 needs tree t's
     predictions), so GBT uses the per-tree builder, not the multi-tree
-    batch.  Losses: `"squared"` (regression; `predict` returns the raw
-    score) and `"logistic"` (binary classification; `predict` thresholds
-    at 0, `predict_proba` returns (B, 2) probabilities).
+    batch.  `split_mode="hist"` quantizes numeric columns once before the
+    first round and every round scores bucket boundaries only (the
+    PLANET-style baseline; exact is the default).  Losses: `"squared"`
+    (regression; `predict` returns the raw score) and `"logistic"` (binary
+    classification; `predict` thresholds at 0, `predict_proba` returns
+    (B, 2) probabilities).
 
     `fit(ds)` expects a `TabularDataset`; for `"logistic"` the labels must
     be 0/1 ints.  `base_score` is the fitted prior (mean / log-odds) that
     every prediction starts from.  Inputs to `predict*` are (B, m_num)
     numeric and (B, m_cat) categorical arrays, as for `RandomForest`.
+    Fitted rounds are packed into a `forest.PackedForest` so `predict_raw`
+    is ONE jitted device call regardless of the round count.
     """
 
     params: GBTParams
     trees: list = dataclasses.field(default_factory=list)
     base_score: float = 0.0
     m: int = 0
+    packed: Optional[forest_lib.PackedForest] = None
 
     def fit(self, ds: TabularDataset) -> "GBTModel":
         p = self.params
@@ -79,7 +118,14 @@ class GBTModel:
         tparams = tree_lib.TreeParams(
             max_depth=p.max_depth, min_records=p.min_records,
             num_candidates=p.num_candidates or ds.m, impurity="variance",
-            task="regression", backend=p.backend, bagging="none")
+            task="regression", backend=p.backend, bagging="none",
+            split_mode=p.split_mode, num_bins=p.num_bins)
+        # hist mode: quantize once, before the first round — the bucket
+        # state depends only on the columns, not on the residuals
+        bin_of = bin_edges = None
+        if p.split_mode == "hist" and ds.m_num:
+            bin_of, bin_edges = presort.quantize(ds.num, sorted_vals,
+                                                 p.num_bins)
 
         for t in range(p.num_rounds):
             if p.loss == "logistic":
@@ -92,20 +138,33 @@ class GBTModel:
                 labels=jnp.asarray(resid, jnp.float32),
                 sorted_vals=sorted_vals, sorted_idx=sorted_idx,
                 arities=ds.arities, num_classes=2,
-                params=tparams, seed=p.seed, tree_idx=t)
+                params=tparams, seed=p.seed, tree_idx=t,
+                bin_of=bin_of, bin_edges=bin_edges)
             self.trees.append(tr)
             step = np.asarray(tr.predict_raw(ds.num, ds.cat))[:, 0]
             f = f + p.learning_rate * step
+        if self.trees:                        # num_rounds=0: prior only
+            self.packed = forest_lib.pack_trees(self.trees)
         return self
 
+    def _packed(self) -> forest_lib.PackedForest:
+        assert self.trees, "fit first"
+        if self.packed is None or self.packed.num_trees != len(self.trees):
+            self.packed = forest_lib.pack_trees(self.trees)
+        return self.packed
+
     def predict_raw(self, num, cat) -> np.ndarray:
-        f = np.full((np.asarray(num).shape[0] if np.asarray(num).size
-                     else np.asarray(cat).shape[0],), self.base_score)
-        for tr in self.trees:
-            f = f + self.params.learning_rate * np.asarray(
-                tr.predict_raw(jnp.asarray(num, jnp.float32),
-                               jnp.asarray(cat, jnp.int32)))[:, 0]
-        return f
+        """Raw boosted score, (B,) — ONE jitted call for all rounds."""
+        if not self.trees:                    # num_rounds=0: the prior
+            B = (np.asarray(num).shape[0] if np.asarray(num).size
+                 else np.asarray(cat).shape[0])
+            return np.full((B,), self.base_score, np.float32)
+        pk = self._packed()
+        return np.asarray(_gbt_predict_raw_jit(
+            pk.feature, pk.threshold, pk.is_cat, pk.cat_mask, pk.children,
+            pk.value, jnp.asarray(num, jnp.float32),
+            jnp.asarray(cat, jnp.int32), jnp.float32(self.base_score),
+            jnp.float32(self.params.learning_rate), pk.m_num, pk.iters))
 
     def predict(self, num, cat) -> np.ndarray:
         f = self.predict_raw(num, cat)
@@ -115,5 +174,5 @@ class GBTModel:
 
     def predict_proba(self, num, cat) -> np.ndarray:
         assert self.params.loss == "logistic"
-        p1 = 1.0 / (1.0 + np.exp(-self.predict_raw(num, cat)))
+        p1 = 1.0 / (1.0 + np.exp(-self.predict_raw(num, cat).astype(np.float64)))
         return np.stack([1 - p1, p1], -1)

@@ -31,3 +31,65 @@ def presort_columns(num: jnp.ndarray) -> jnp.ndarray:
 def gather_sorted(num: jnp.ndarray, sorted_idx: jnp.ndarray) -> jnp.ndarray:
     """Materialize the sorted values: (m_num, n) float32."""
     return jnp.take_along_axis(num.T, sorted_idx, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# PLANET-style threshold buckets (the approximate contrast baseline)
+# ---------------------------------------------------------------------------
+#
+# The paper's central claim is that DRF stays EXACT where PLANET-era systems
+# quantize numeric columns into fixed bins.  `split_mode="hist"` reproduces
+# that baseline inside the same fused level machinery: each numeric column
+# is bucketed ONCE at presort time into <= num_bins quantile buckets, and
+# every level scores only the bucket boundaries from per-leaf (bin × class)
+# count tables (splits.best_numeric_split_histogram) instead of every
+# midpoint between consecutive values.
+
+@functools.partial(jax.jit, static_argnames=("num_bins",))
+def quantize_edges(sorted_vals: jnp.ndarray, num_bins: int) -> jnp.ndarray:
+    """Per-column bucket upper edges from the presorted values.
+
+    Args:
+      sorted_vals: (m_num, n) float32, each row ascending (gather_sorted).
+      num_bins:    bucket count B (PLANET-style fixed budget, e.g. 255).
+    Returns:
+      edges: (m_num, B) float32 — edges[j, b] is the LARGEST value of
+      column j falling in bucket b (equi-depth quantile positions, so every
+      bucket holds ~n/B rows; edges[j, B-1] is the column max).  The bucket
+      rule is  b(x) = number of lower edges strictly below x, so the
+      candidate threshold for
+      a cut after bucket b is exactly edges[j, b] with the tree's usual
+      `x <= thr` condition — training-time bucket partitions and
+      inference-time threshold partitions agree EXACTLY.  Duplicate edges
+      (heavy ties / constant columns) simply leave empty buckets, which
+      score as zero-gain cuts and are never selected.
+    """
+    n = sorted_vals.shape[1]
+    pos = (jnp.arange(1, num_bins + 1) * n) // num_bins - 1   # (B,)
+    pos = jnp.clip(pos, 0, n - 1)
+    return sorted_vals[:, pos]
+
+
+@jax.jit
+def bin_columns(num: jnp.ndarray, edges: jnp.ndarray) -> jnp.ndarray:
+    """Bucket id per row per column: (n, m_num) values -> (m_num, n) int32.
+
+    bin_of[j, k] = searchsorted(edges[j, :-1], num[k, j], side="left"), i.e.
+    the first bucket whose upper edge is >= the value; values above the
+    column max (unseen at fit time) land in the last bucket.
+    """
+    def per_col(v, e):
+        return jnp.searchsorted(e[:-1], v, side="left").astype(jnp.int32)
+    return jax.vmap(per_col)(num.T, edges)
+
+
+def quantize(num: jnp.ndarray, sorted_vals: jnp.ndarray,
+             num_bins: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The full hist-mode bucket state from an existing presort.
+
+    The one quantization recipe shared by `RandomForest.fit`,
+    `GBTModel.fit` and `TabularDataset.quantize`.  Returns
+    (bin_of (m_num, n) int32, edges (m_num, num_bins) float32).
+    """
+    edges = quantize_edges(sorted_vals, num_bins)
+    return bin_columns(num, edges), edges

@@ -358,6 +358,51 @@ def best_numeric_split_leaf_ordered(
 
 
 # ---------------------------------------------------------------------------
+# Numerical — PLANET-style histogram (approximate) mode
+# ---------------------------------------------------------------------------
+
+def best_numeric_split_histogram(
+    table: jnp.ndarray,          # (L+1, B, S) per-leaf (bin × stat) table
+    edges: jnp.ndarray,          # (B,) ascending bucket upper edges
+    cand_leaf: jnp.ndarray,      # (L+1,) bool
+    impurity: str = "gini",
+    task: str = "classification",
+    min_records: float = 1.0,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Approximate supersplit: score only the B−1 bucket boundaries.
+
+    The PLANET-style contrast baseline to the paper's exact search
+    (`split_mode="hist"`): the numeric column was quantized once at presort
+    time into <= B quantile buckets (presort.quantize_edges), every level
+    builds the per-leaf (bin × stat) count `table` with the SAME scatter-add
+    machinery as the categorical path (`categorical_count_table` /
+    the Pallas `cat_hist` kernel with bins as the arity), and this scorer
+    enumerates prefix cuts in bucket order — no reordering, buckets are
+    already value-sorted, which is the only difference from
+    `best_categorical_split_from_table`.
+
+    A cut after bucket b uses threshold edges[b] (the largest value in the
+    left buckets), so the tree's `x <= thr` condition reproduces the scored
+    partition exactly.  Empty buckets (duplicate edges) give zero-gain
+    duplicate cuts and are never selected over a populated boundary.
+
+    Returns (best_gain (L+1,), best_threshold (L+1,)).
+    """
+    totals = table.sum(1)                                   # (L+1, S)
+    cnt = count_fn(task)
+    prefix = jnp.cumsum(table, axis=1)                      # cut after bin b
+    left = prefix[:, :-1, :]                                # cuts 0..B-2
+    right = totals[:, None, :] - left
+    ok = (cnt(left) >= min_records) & (cnt(right) >= min_records) \
+        & cand_leaf[:, None]
+    gains = jnp.where(ok, split_gain(left, right, impurity), NEG)  # (L+1, B-1)
+    best_cut = jnp.argmax(gains, axis=1)                    # first max
+    best_gain = jnp.take_along_axis(gains, best_cut[:, None], axis=1)[:, 0]
+    best_thr = jnp.where(jnp.isfinite(best_gain), edges[best_cut], 0.0)
+    return best_gain, best_thr
+
+
+# ---------------------------------------------------------------------------
 # Categorical — count tables + Breiman ordering (paper §2.4, SM)
 # ---------------------------------------------------------------------------
 

@@ -45,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bagging, class_list, splits
+from repro.core import bagging, class_list, presort, splits
 
 
 # ---------------------------------------------------------------------------
@@ -60,6 +60,12 @@ class TreeParams:
     impurity: str = "gini"          # gini | entropy | variance
     task: str = "classification"
     backend: str = "segment"        # segment | scan | kernel (Pallas)
+    # exact = the paper's midpoint-exhaustive search (default); hist = the
+    # PLANET-style contrast baseline: numeric columns quantized once into
+    # <= num_bins buckets, splits scored on bucket boundaries only, from
+    # per-leaf (bin × class) count tables (DESIGN.md §6)
+    split_mode: str = "exact"       # exact | hist
+    num_bins: int = 255             # histogram-mode bucket budget per column
     usb: bool = False               # unique set of bagged features per depth (§3.2)
     bagging: str = "poisson"        # poisson | multinomial | none
     leaf_pad: int = 8               # pad open-leaf count to multiples (recompile bound)
@@ -289,8 +295,8 @@ def _partition_leaf_order(ord_idx, lf_pos, bits, new_left, new_right,
 
 _LEVEL_STATICS = (
     "Lp", "m_num", "m_cat", "max_arity", "num_classes", "m_prime", "usb",
-    "impurity", "task", "min_records", "backend", "use_ord", "need_partition",
-    "supersplit_fn")
+    "impurity", "task", "min_records", "backend", "split_mode", "num_bins",
+    "use_ord", "need_partition", "supersplit_fn")
 
 # Dispatch/trace counters: tests assert the batched builder issues ONE
 # jitted level program per depth per tree-batch (and never falls back to
@@ -306,12 +312,12 @@ _BATCH_STEP_TRACES = [0]   # distinct compilations of the batched program
 _BATCH_VMAP_ELEMS = 1 << 19
 
 
-def _level_step_core(num, cat, labels, sorted_vals, sorted_idx, ord_idx,
-                     leaf_of, w, stats, splittable_p, totals, row_counts,
-                     fkey, depth, *, Lp, m_num, m_cat, max_arity,
-                     num_classes, m_prime, usb, impurity, task, min_records,
-                     backend, use_ord, need_partition, supersplit_fn,
-                     fused_tail=True):
+def _level_step_core(num, cat, labels, sorted_vals, sorted_idx, bin_of,
+                     bin_edges, ord_idx, leaf_of, w, stats, splittable_p,
+                     totals, row_counts, fkey, depth, *, Lp, m_num, m_cat,
+                     max_arity, num_classes, m_prime, usb, impurity, task,
+                     min_records, backend, split_mode, num_bins, use_ord,
+                     need_partition, supersplit_fn, fused_tail=True):
     """One whole depth level of Alg. 2 as a single device program.
 
     Steps 3-7 fused: candidate feature draw, numeric + categorical
@@ -322,9 +328,18 @@ def _level_step_core(num, cat, labels, sorted_vals, sorted_idx, ord_idx,
     row-indexed state (`leaf_of`, the per-column leaf order) stays
     device-resident.
 
+    `split_mode` (static) selects the numeric search: "exact" runs the
+    paper's midpoint-exhaustive engines over the presorted order; "hist"
+    (the PLANET-style baseline, DESIGN.md §6) scores only the `num_bins`
+    bucket boundaries from per-leaf (bin × stat) count tables built by the
+    categorical scatter-add machinery (`bin_of`/`bin_edges` replace
+    `sorted_vals`/`sorted_idx` — no presorted state in the hot path).
+
     `supersplit_fn` (static) replaces the local numeric search with the
     shard_map'd distributed one — it composes under this jit, so the same
-    fused program runs on the mesh (distributed.py).
+    fused program runs on the mesh (distributed.py).  In hist mode its
+    signature takes (bin_of, bin_edges, ...) instead of the sorted order
+    (distributed.make_hist_sharded_supersplit).
     """
     L1 = Lp + 1
     m = m_num + m_cat
@@ -337,7 +352,28 @@ def _level_step_core(num, cat, labels, sorted_vals, sorted_idx, ord_idx,
 
     gains_parts, masks = [], None
     thr_num = jnp.zeros((max(m_num, 1), L1), jnp.float32)
-    if m_num:
+    if m_num and split_mode == "hist":
+        cnum = cand_p[:, :m_num].T
+        if supersplit_fn is not None:
+            g, t = supersplit_fn(bin_of, bin_edges, leaf_of, w, stats,
+                                 cnum, Lp, impurity, task, min_records)
+        else:
+            if backend == "kernel":
+                from repro.kernels import ops as kops
+                tables = kops.categorical_tables(
+                    bin_of, leaf_of, w, labels, V=num_bins, Lp=Lp, task=task,
+                    num_classes=num_classes)
+            else:
+                tables = jax.vmap(
+                    lambda b: splits.categorical_count_table(
+                        b, leaf_of, w, stats, Lp, num_bins))(bin_of)
+            g, t = jax.vmap(
+                lambda tb, e, c: splits.best_numeric_split_histogram(
+                    tb, e, c, impurity, task, min_records))(
+                tables, bin_edges, cnum)
+        gains_parts.append(g)
+        thr_num = t
+    elif m_num:
         cnum = cand_p[:, :m_num].T
         if supersplit_fn is not None:
             g, t = supersplit_fn(sorted_vals, sorted_idx, leaf_of, w, stats,
@@ -449,28 +485,31 @@ def _level_step_core(num, cat, labels, sorted_vals, sorted_idx, ord_idx,
 
 
 @functools.partial(jax.jit, static_argnames=_LEVEL_STATICS)
-def _fused_level_step(num, cat, labels, sorted_vals, sorted_idx, ord_idx,
-                      leaf_of, w, stats, splittable_p, totals, row_counts,
-                      fkey, depth, *, Lp, m_num, m_cat, max_arity,
-                      num_classes, m_prime, usb, impurity, task, min_records,
-                      backend, use_ord, need_partition, supersplit_fn):
+def _fused_level_step(num, cat, labels, sorted_vals, sorted_idx, bin_of,
+                      bin_edges, ord_idx, leaf_of, w, stats, splittable_p,
+                      totals, row_counts, fkey, depth, *, Lp, m_num, m_cat,
+                      max_arity, num_classes, m_prime, usb, impurity, task,
+                      min_records, backend, split_mode, num_bins, use_ord,
+                      need_partition, supersplit_fn):
     """The per-tree fused level step (see `_level_step_core`)."""
     struct, new_leaf_of, new_ord_idx, next_totals, _ = _level_step_core(
-        num, cat, labels, sorted_vals, sorted_idx, ord_idx, leaf_of, w,
-        stats, splittable_p, totals, row_counts, fkey, depth, Lp=Lp,
-        m_num=m_num, m_cat=m_cat, max_arity=max_arity,
+        num, cat, labels, sorted_vals, sorted_idx, bin_of, bin_edges,
+        ord_idx, leaf_of, w, stats, splittable_p, totals, row_counts, fkey,
+        depth, Lp=Lp, m_num=m_num, m_cat=m_cat, max_arity=max_arity,
         num_classes=num_classes, m_prime=m_prime, usb=usb, impurity=impurity,
-        task=task, min_records=min_records, backend=backend, use_ord=use_ord,
+        task=task, min_records=min_records, backend=backend,
+        split_mode=split_mode, num_bins=num_bins, use_ord=use_ord,
         need_partition=need_partition, supersplit_fn=supersplit_fn)
     return struct, new_leaf_of, new_ord_idx, next_totals
 
 
 @functools.partial(jax.jit, static_argnames=_LEVEL_STATICS)
 def _fused_level_step_batched(num, cat, labels, sorted_vals, sorted_idx,
-                              ord_idx, leaf_of, w, stats, splittable_p,
-                              totals, row_counts, fkeys, depth, *, Lp, m_num,
-                              m_cat, max_arity, num_classes, m_prime, usb,
-                              impurity, task, min_records, backend, use_ord,
+                              bin_of, bin_edges, ord_idx, leaf_of, w, stats,
+                              splittable_p, totals, row_counts, fkeys, depth,
+                              *, Lp, m_num, m_cat, max_arity, num_classes,
+                              m_prime, usb, impurity, task, min_records,
+                              backend, split_mode, num_bins, use_ord,
                               need_partition, supersplit_fn):
     """One depth level of EVERY tree in a batch as a single device program.
 
@@ -521,14 +560,16 @@ def _fused_level_step_batched(num, cat, labels, sorted_vals, sorted_idx,
             _level_step_core, Lp=Lp, m_num=m_num, m_cat=m_cat,
             max_arity=max_arity, num_classes=num_classes, m_prime=m_prime,
             usb=usb, impurity=impurity, task=task, min_records=min_records,
-            backend=backend, use_ord=use_ord, need_partition=need_partition,
+            backend=backend, split_mode=split_mode, num_bins=num_bins,
+            use_ord=use_ord, need_partition=need_partition,
             supersplit_fn=supersplit_fn, fused_tail=True)
 
         def body(args):
             ord_t, leaf_t, w_t, stats_t, sp_t, tot_t, rc_t, fk_t = args
             s, nl, no, nt, _ = core(num, cat, labels, sorted_vals,
-                                    sorted_idx, ord_t, leaf_t, w_t, stats_t,
-                                    sp_t, tot_t, rc_t, fk_t, depth)
+                                    sorted_idx, bin_of, bin_edges, ord_t,
+                                    leaf_t, w_t, stats_t, sp_t, tot_t, rc_t,
+                                    fk_t, depth)
             return s, nl, no, nt
 
         return jax.lax.map(body, (ord_idx, leaf_of, w, stats, splittable_p,
@@ -538,13 +579,15 @@ def _fused_level_step_batched(num, cat, labels, sorted_vals, sorted_idx,
         _level_step_core, Lp=Lp, m_num=m_num, m_cat=m_cat,
         max_arity=max_arity, num_classes=num_classes, m_prime=m_prime,
         usb=usb, impurity=impurity, task=task, min_records=min_records,
-        backend=backend, use_ord=use_ord, need_partition=need_partition,
+        backend=backend, split_mode=split_mode, num_bins=num_bins,
+        use_ord=use_ord, need_partition=need_partition,
         supersplit_fn=supersplit_fn, fused_tail=False)
     struct, new_leaf_of, _, _, part = jax.vmap(
-        core, in_axes=(None, None, None, None, None,
+        core, in_axes=(None, None, None, None, None, None, None,
                        0, 0, 0, 0, 0, 0, 0, 0, None))(
-        num, cat, labels, sorted_vals, sorted_idx, ord_idx, leaf_of, w,
-        stats, splittable_p, totals, row_counts, fkeys, depth)
+        num, cat, labels, sorted_vals, sorted_idx, bin_of, bin_edges,
+        ord_idx, leaf_of, w, stats, splittable_p, totals, row_counts, fkeys,
+        depth)
 
     # scatter-backed tail on the FLAT (tree, segment) index space: per-tree
     # results are bit-identical (each tree's rows accumulate in the same
@@ -580,6 +623,11 @@ def _fused_level_step_batched(num, cat, labels, sorted_vals, sorted_idx,
 # ---------------------------------------------------------------------------
 
 def _tree_setup(sorted_vals, arities, labels, params):
+    if params.split_mode not in ("exact", "hist"):
+        raise ValueError(f"unknown split_mode {params.split_mode!r} "
+                         "(expected 'exact' or 'hist')")
+    if params.split_mode == "hist" and params.num_bins < 2:
+        raise ValueError("hist mode needs num_bins >= 2")
     n = int(labels.shape[0])
     m_num = int(sorted_vals.shape[0]) if sorted_vals.size else 0
     m_cat = len(arities)
@@ -588,6 +636,21 @@ def _tree_setup(sorted_vals, arities, labels, params):
     m_prime = params.num_candidates or max(
         1, math.isqrt(m) + (0 if math.isqrt(m) ** 2 == m else 1))
     return n, m_num, m_cat, m, max_arity, m_prime
+
+
+def _hist_state(num, sorted_vals, params, m_num, bin_of, bin_edges):
+    """Resolve the hist-mode bucket state (zero-size dummies in exact mode).
+
+    When the caller (RandomForest/GBTModel.fit) did not precompute the
+    quantization, derive it here from the presorted values — once per tree
+    build, shared by every level.
+    """
+    if params.split_mode == "hist" and m_num:
+        if bin_of is None:
+            bin_of, bin_edges = presort.quantize(num, sorted_vals,
+                                                 params.num_bins)
+        return bin_of, bin_edges
+    return jnp.zeros((0, 0), jnp.int32), jnp.zeros((0, 0), jnp.float32)
 
 
 class _NodeAccum:
@@ -673,6 +736,8 @@ def build_tree(
     params: TreeParams, seed: int, tree_idx: int,
     collect_stats: bool = False,
     supersplit_fn=None,
+    bin_of: Optional[jnp.ndarray] = None,
+    bin_edges: Optional[jnp.ndarray] = None,
 ) -> tuple[Tree, list[LevelStats]]:
     """Train ONE tree with one fused jitted device program per depth level.
 
@@ -698,7 +763,13 @@ def build_tree(
       supersplit_fn: optional replacement for the local numeric supersplit
                      (distributed.py passes the shard_map'd search; it
                      composes inside the fused jit so the same program
-                     lowers for the mesh).
+                     lowers for the mesh).  Under `split_mode="hist"` the
+                     expected signature is the histogram one
+                     (make_hist_sharded_supersplit).
+      bin_of/bin_edges: hist-mode bucket state ((m_num, n) int32 bucket ids
+                     and (m_num, num_bins) f32 upper edges) as produced by
+                     `TabularDataset.quantize`; derived here from
+                     `sorted_vals` when omitted.  Ignored in exact mode.
 
     Produces exactly the trees of `build_tree_reference` (asserted by
     tests/test_fused_level.py) while the host does bookkeeping only: per
@@ -713,6 +784,9 @@ def build_tree(
     n, m_num, m_cat, m, max_arity, m_prime = _tree_setup(
         sorted_vals, arities, labels, params)
     task = params.task
+    hist = params.split_mode == "hist"
+    bin_of, bin_edges = _hist_state(num, sorted_vals, params, m_num,
+                                    bin_of, bin_edges)
 
     w = bagging.bag_counts(seed, tree_idx, n, params.bagging)
     stats = splits.row_stats(labels, w, num_classes, task)
@@ -729,8 +803,9 @@ def build_tree(
 
     # the segment backend's leaf-ordered state; other backends read the
     # plain presorted layout and get zero-size dummies for the other one
+    # (hist mode reads neither: bucket tables are scatter-adds in row order)
     use_ord = (params.backend == "segment" and supersplit_fn is None
-               and m_num > 0)
+               and m_num > 0 and not hist)
     # root: all rows in leaf 1, so value order == (leaf, value) order
     ord_idx = sorted_idx if use_ord else jnp.zeros((0, 0), jnp.int32)
 
@@ -770,17 +845,19 @@ def build_tree(
 
         # the whole level on device: one dispatch, one small struct back
         _STEP_CALLS[0] += 1
+        skip_sorted = use_ord or hist      # neither layout reads the presort
         struct, leaf_of, ord_idx, next_totals = _fused_level_step(
             num, cat, labels,
-            jnp.zeros((0, 0), jnp.float32) if use_ord else sorted_vals,
-            jnp.zeros((0, 0), jnp.int32) if use_ord else sorted_idx,
-            ord_idx, leaf_of, w, stats,
+            jnp.zeros((0, 0), jnp.float32) if skip_sorted else sorted_vals,
+            jnp.zeros((0, 0), jnp.int32) if skip_sorted else sorted_idx,
+            bin_of, bin_edges, ord_idx, leaf_of, w, stats,
             jnp.asarray(splittable_p), jnp.asarray(totals_np),
             jnp.asarray(row_counts_np), fkey,
             jnp.int32(depth), Lp=Lp, m_num=m_num, m_cat=m_cat,
             max_arity=max_arity, num_classes=num_classes, m_prime=m_prime,
             usb=params.usb, impurity=params.impurity, task=task,
             min_records=params.min_records, backend=params.backend,
+            split_mode=params.split_mode, num_bins=params.num_bins,
             use_ord=use_ord,
             need_partition=use_ord and depth + 1 < params.max_depth,
             supersplit_fn=supersplit_fn)
@@ -832,6 +909,10 @@ def build_tree(
                     ord_idx = jnp.take(remap, ord_idx[:, closed:])
                     row_counts_np = row_counts_np.copy()
                     row_counts_np[0] = 0      # the dropped (closed) rows
+                elif hist:
+                    # bucket ids are row-indexed; no sorted state to filter
+                    if m_num:
+                        bin_of = bin_of[:, keep_idx]
                 elif m_num:
                     # filter the presorted order (stability preserves it):
                     # every column keeps the same n_new rows, so the flat
@@ -868,6 +949,8 @@ def build_forest(
     arities: tuple[int, ...], num_classes: int,
     params: TreeParams, seed: int, tree_indices,
     collect_stats: bool = False,
+    bin_of: Optional[jnp.ndarray] = None,
+    bin_edges: Optional[jnp.ndarray] = None,
 ) -> tuple[list[Tree], list[list[LevelStats]]]:
     """Train a BATCH of trees with one fused jitted program per depth level.
 
@@ -897,6 +980,11 @@ def build_forest(
     n, m_num, m_cat, m, max_arity, m_prime = _tree_setup(
         sorted_vals, arities, labels, params)
     task = params.task
+    hist = params.split_mode == "hist"
+    # the bucket state is tree-independent (quantized once per forest):
+    # shared read-only input of the batched step, like the presorted order
+    bin_of, bin_edges = _hist_state(num, sorted_vals, params, m_num,
+                                    bin_of, bin_edges)
     tidx = [int(t) for t in tree_indices]
     T = len(tidx)
     assert T >= 1
@@ -921,7 +1009,7 @@ def build_forest(
     leaf_of = jnp.ones((T, n), jnp.int32)
     stats_logs: list[list[LevelStats]] = [[] for _ in range(T)]
 
-    use_ord = params.backend == "segment" and m_num > 0
+    use_ord = params.backend == "segment" and m_num > 0 and not hist
     # every tree starts at the root, where value order == (leaf, value)
     # order, so the initial per-tree leaf order is the shared presort
     ord_idx = (jnp.broadcast_to(sorted_idx[None], (T,) + sorted_idx.shape)
@@ -975,17 +1063,19 @@ def build_forest(
         # the whole level of the whole batch on device: ONE dispatch,
         # one stacked struct back
         _BATCH_STEP_CALLS[0] += 1
+        skip_sorted = use_ord or hist
         struct, leaf_of, ord_idx, next_totals = _fused_level_step_batched(
             num, cat, labels,
-            jnp.zeros((0, 0), jnp.float32) if use_ord else sorted_vals,
-            jnp.zeros((0, 0), jnp.int32) if use_ord else sorted_idx,
-            ord_idx, leaf_of, w, stats,
+            jnp.zeros((0, 0), jnp.float32) if skip_sorted else sorted_vals,
+            jnp.zeros((0, 0), jnp.int32) if skip_sorted else sorted_idx,
+            bin_of, bin_edges, ord_idx, leaf_of, w, stats,
             jnp.asarray(splittable_p), jnp.asarray(totals_np),
             jnp.asarray(row_counts_np), fkeys,
             jnp.int32(depth), Lp=Lp, m_num=m_num, m_cat=m_cat,
             max_arity=max_arity, num_classes=num_classes, m_prime=m_prime,
             usb=params.usb, impurity=params.impurity, task=task,
             min_records=params.min_records, backend=params.backend,
+            split_mode=params.split_mode, num_bins=params.num_bins,
             use_ord=use_ord,
             need_partition=use_ord and depth + 1 < params.max_depth,
             supersplit_fn=None)
@@ -1043,7 +1133,12 @@ def build_tree_reference(
     Kept as the executable specification of Alg. 2 — the fused `build_tree`
     must reproduce its trees exactly (tests/test_fused_level.py), and
     benchmarks/level_step_bench.py measures the fused speedup against it.
+    EXACT mode only: the histogram mode is an approximation with no
+    midpoint-exhaustive specification to match (its tests compare the
+    batched builder against the per-tree fused builder instead).
     """
+    assert params.split_mode == "exact", \
+        "build_tree_reference is the exact-mode specification"
     n, m_num, m_cat, m, max_arity, m_prime = _tree_setup(
         sorted_vals, arities, labels, params)
     task = params.task

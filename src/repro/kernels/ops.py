@@ -24,6 +24,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import splits
 from repro.kernels import cat_hist, split_scan
 
 
@@ -33,6 +34,42 @@ def _on_tpu() -> bool:
 
 def _pad_rows(n: int, bn: int) -> int:
     return (-n) % bn
+
+
+# --- interpret-mode compile-cost bounds -----------------------------------
+#
+# Off-TPU the Pallas kernels run in interpret mode, where the sequential
+# row-block grid is UNROLLED at trace time: the lowered program contains one
+# copy of the kernel body per block, so with the default bn=256 a fused
+# level step at n≫1M would emit thousands of body copies and compile
+# pathologically (ROADMAP "kernel-backend compile cost at scale").  The
+# plan below bounds the unrolled block count by growing the block size —
+# the body stays ONE set of ops, only operand shapes grow — and, for the
+# split_scan kernel only (whose in-block prefix is a Bn×Bn triangular
+# matmul, O(bn²) memory/work), gates to the exact jnp `segment` engine once
+# the grown block would exceed _MAX_INTERPRET_BN.  On TPU nothing changes:
+# the grid is a real sequential grid, not an unroll.
+
+_MAX_INTERPRET_ROW_BLOCKS = 64
+_MAX_INTERPRET_BN = 2048
+
+
+def _interpret_grid_plan(n: int, bn: int,
+                         quadratic: bool = False) -> tuple[int, int, bool]:
+    """(bn_eff, nblocks, gated) bounding the interpret-mode grid.
+
+    nblocks <= _MAX_INTERPRET_ROW_BLOCKS always; `gated=True` (only
+    possible with quadratic=True) means the caller must fall back to a
+    non-Pallas exact engine instead.
+    """
+    blocks = max(1, -(-n // bn))
+    if blocks <= _MAX_INTERPRET_ROW_BLOCKS:
+        return bn, blocks, False
+    bn_eff = -(-n // _MAX_INTERPRET_ROW_BLOCKS)
+    bn_eff += (-bn_eff) % 128                  # keep lane alignment
+    if quadratic and bn_eff > _MAX_INTERPRET_BN:
+        return bn, blocks, True
+    return bn_eff, max(1, -(-n // bn_eff)), False
 
 
 def _stat_dim(labels, num_classes, task: str) -> int:
@@ -58,6 +95,21 @@ def split_scan_supersplit(sorted_vals, sorted_idx, leaf_of, w, labels,
     m, n = sorted_vals.shape
     L1 = Lp + 1
     s_dim = _stat_dim(labels, num_classes, task)
+
+    if interpret:
+        bn, _, gated = _interpret_grid_plan(n, bn, quadratic=True)
+        if gated:
+            # n too large for a bounded-unroll Pallas interpret program:
+            # answer with the exact vectorized jnp engine instead (same
+            # split choices up to float summation order — the same
+            # tolerance the kernel itself is held to vs the scan spec)
+            stats = splits.row_stats(labels, w, s_dim, task)
+
+            def per_col(v, s, c):
+                return splits.best_numeric_split_segment(
+                    v, leaf_of[s], w[s], stats[s], c, Lp, impurity, task,
+                    min_records)
+            return jax.vmap(per_col)(sorted_vals, sorted_idx, cand)
 
     leaf_g = leaf_of[sorted_idx]                      # (m, n)
     w_g = w[sorted_idx]
@@ -100,6 +152,10 @@ def categorical_tables(cat_cols, leaf_of, w, labels, *, V, Lp,
         interpret = not _on_tpu()
     m, n = cat_cols.shape
     s_dim = _stat_dim(labels, num_classes, task)
+    if interpret:
+        # bound the unrolled row-block count (body work is linear in bn
+        # here — the one-hot matmul — so growing the block never gates)
+        bn, _, _ = _interpret_grid_plan(n, bn)
     bv = bv or cat_hist.default_bv(V, Lp + 1)
     Vp = V + (-V) % bv
     pad = _pad_rows(n, bn)

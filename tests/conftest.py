@@ -4,6 +4,20 @@ distributed tests force a multi-device host platform."""
 import numpy as np
 import pytest
 
+try:
+    # Fixed deterministic hypothesis profile for the property/oracle suites
+    # (pytest -m hypothesis): derandomized so a run is reproducible in CI,
+    # no deadline (jit compiles inside test bodies), no example database
+    # (state on disk would make runs order-dependent).
+    import hypothesis
+
+    hypothesis.settings.register_profile(
+        "repro", derandomize=True, deadline=None, max_examples=50,
+        database=None)
+    hypothesis.settings.load_profile("repro")
+except ImportError:        # optional dev dependency (DESIGN.md §Testing)
+    pass
+
 
 @pytest.fixture
 def rng():

@@ -19,6 +19,7 @@ from repro.core import bagging, class_list, presort
 # class list (paper §2.3)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.hypothesis
 @settings(max_examples=30, deadline=None)
 @given(st.integers(1, 1000), st.integers(1, 60_000), st.integers(0, 2**31 - 1))
 def test_pack_roundtrip(n, num_leaves, seed):

@@ -87,6 +87,38 @@ def test_distributed_forest_equals_local():
 
 
 @pytest.mark.slow
+def test_hist_sharded_supersplit_psum_merge():
+    """Histogram (PLANET-style) supersplit on the 2x4 mesh: per-shard
+    (bins × stats) tables merged by ONE psum over the data axis must give
+    the same forest as the local hist search — the network-complexity
+    contrast baseline to the exact all_gather (DESIGN.md §6)."""
+    print(_run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import distributed, tree as tree_lib
+        from repro.core.dataset import from_numpy
+        from repro.core.forest import RandomForest
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(2, 4)
+        rng = np.random.default_rng(1)
+        n = 1024
+        num = rng.normal(size=(n, 8)).astype(np.float32)
+        y = ((num[:, 0] + num[:, 1] * num[:, 2]) > 0).astype(np.int32)
+        ds = from_numpy(num, None, y)
+        B = 32
+        p = tree_lib.TreeParams(max_depth=4, leaf_pad=8, split_mode='hist',
+                                num_bins=B)
+        local = RandomForest(p, num_trees=2, seed=11).fit(ds)
+        fn = distributed.make_hist_sharded_supersplit(mesh)
+        dist = RandomForest(p, num_trees=2, seed=11).fit(ds, supersplit_fn=fn)
+        for ta, tb in zip(local.trees, dist.trees):
+            assert ta.num_nodes == tb.num_nodes
+            np.testing.assert_array_equal(ta.feature, tb.feature)
+            np.testing.assert_array_equal(ta.threshold, tb.threshold)
+        print('HIST-PSUM-OK')
+    """))
+
+
+@pytest.mark.slow
 def test_sharded_bit_broadcast():
     """1-bit condition evaluation via psum over the splitter axis (Alg.2
     step 5/7) matches local evaluation."""

@@ -121,6 +121,80 @@ def test_cat_hist_kernel_sweep(V, bv, bn):
     np.testing.assert_allclose(np.asarray(tbl_k), np.asarray(tbl_r), atol=1e-4)
 
 
+# ---------------------------------------------------------------------------
+# Interpret-mode compile-cost bound (ROADMAP "kernel-backend compile cost"):
+# off-TPU the row-block grid is unrolled at trace time, so the block count
+# must stay bounded no matter how large n grows.
+# ---------------------------------------------------------------------------
+
+def test_interpret_grid_plan_bounds_block_count():
+    for n in (1_000, 100_000, 1_000_000, 10_000_000, 10**9):
+        bn, nblocks, gated = ops._interpret_grid_plan(n, 256)
+        assert nblocks <= ops._MAX_INTERPRET_ROW_BLOCKS, n
+        assert not gated                       # linear kernels never gate
+        assert bn * nblocks >= n
+        bn_q, nblocks_q, gated_q = ops._interpret_grid_plan(
+            n, 256, quadratic=True)
+        # quadratic kernels either fit the bounded unroll with a bounded
+        # block size, or gate to the jnp fallback — never an unbounded grid
+        assert gated_q or (nblocks_q <= ops._MAX_INTERPRET_ROW_BLOCKS
+                           and bn_q <= ops._MAX_INTERPRET_BN), n
+    # small n: untouched (bit-compatible with the original block schedule)
+    assert ops._interpret_grid_plan(1_000, 256) == (256, 4, False)
+
+
+def test_split_scan_chunked_blocks_match_default(monkeypatch):
+    """Forcing the block-growth path (as if n were huge) must reproduce the
+    default-schedule splits — same supersplit, bigger blocks."""
+    sv, si, leaf, w, y, cand = _mk(5, 640, 2, 3, 2, dup=True)
+    args = (jnp.asarray(sv), jnp.asarray(si), jnp.asarray(leaf),
+            jnp.asarray(w), jnp.asarray(y), jnp.asarray(cand), 3)
+    g0, t0 = ops.split_scan_supersplit(*args, bn=64, num_classes=2)
+    monkeypatch.setattr(ops, "_MAX_INTERPRET_ROW_BLOCKS", 2)
+    g1, t1 = ops.split_scan_supersplit(*args, bn=64, num_classes=2)
+    fin = np.isfinite(np.asarray(g0))
+    assert (np.isfinite(np.asarray(g1)) == fin).all()
+    np.testing.assert_allclose(np.asarray(g1)[fin], np.asarray(g0)[fin],
+                               atol=2e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(t1)[fin], np.asarray(t0)[fin],
+                               atol=1e-4)
+
+
+def test_split_scan_gated_fallback_matches_kernel(monkeypatch):
+    """The large-n gate (quadratic block would blow VMEM/compile) answers
+    with the exact jnp engine — same splits as the kernel would find."""
+    sv, si, leaf, w, y, cand = _mk(9, 512, 2, 4, 3)
+    args = (jnp.asarray(sv), jnp.asarray(si), jnp.asarray(leaf),
+            jnp.asarray(w), jnp.asarray(y), jnp.asarray(cand), 4)
+    g0, t0 = ops.split_scan_supersplit(*args, bn=64, num_classes=3)
+    monkeypatch.setattr(ops, "_MAX_INTERPRET_ROW_BLOCKS", 2)
+    monkeypatch.setattr(ops, "_MAX_INTERPRET_BN", 128)   # force the gate
+    assert ops._interpret_grid_plan(512, 64, quadratic=True)[2]
+    g1, t1 = ops.split_scan_supersplit(*args, bn=64, num_classes=3)
+    fin = np.isfinite(np.asarray(g0))
+    assert (np.isfinite(np.asarray(g1)) == fin).all()
+    np.testing.assert_allclose(np.asarray(g1)[fin], np.asarray(g0)[fin],
+                               atol=2e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(t1)[fin], np.asarray(t0)[fin],
+                               atol=1e-4)
+
+
+def test_cat_hist_chunked_blocks_exact(monkeypatch):
+    """cat_hist block growth is exact (integer scatter-adds, order-free)."""
+    n, m, L, C, V = 700, 2, 3, 2, 9
+    rng = np.random.default_rng(1)
+    x = rng.integers(0, V, size=(m, n)).astype(np.int32)
+    leaf = rng.integers(0, L + 1, n).astype(np.int32)
+    w = rng.integers(0, 3, n).astype(np.float32)
+    y = rng.integers(0, C, n).astype(np.int32)
+    args = (jnp.asarray(x), jnp.asarray(leaf), jnp.asarray(w),
+            jnp.asarray(y))
+    t0 = ops.categorical_tables(*args, V=V, Lp=L, bn=64, num_classes=C)
+    monkeypatch.setattr(ops, "_MAX_INTERPRET_ROW_BLOCKS", 3)
+    t1 = ops.categorical_tables(*args, V=V, Lp=L, bn=64, num_classes=C)
+    np.testing.assert_allclose(np.asarray(t1), np.asarray(t0), atol=1e-5)
+
+
 def test_kernel_backend_in_tree_builder_matches():
     """TreeParams(backend='kernel') builds the same forest as 'scan'."""
     from repro.core import tree as tree_lib

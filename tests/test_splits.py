@@ -137,6 +137,7 @@ def test_categorical_binary_exact(rng):
             assert g[h] == pytest.approx(best, rel=1e-4, abs=1e-4), f"leaf {h}"
 
 
+@pytest.mark.hypothesis
 @settings(max_examples=25, deadline=None)
 @given(st.integers(0, 10_000), st.integers(2, 4), st.integers(16, 120))
 def test_property_backends_agree(seed, C, n):
@@ -160,6 +161,7 @@ def test_property_backends_agree(seed, C, n):
                                rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.hypothesis
 @settings(max_examples=15, deadline=None)
 @given(st.integers(0, 10_000))
 def test_property_gain_nonnegative_and_split_separates(seed):
