@@ -1,0 +1,141 @@
+"""Perf-regression gate: fresh smoke benchmarks vs the committed baseline.
+
+The committed ``BENCH_*.json`` files record full-scale runs whose walls
+are not reproducible in CI time, so the gate works on the SMOKE variants:
+``BENCH_smoke_baseline.json`` (committed) holds the smoke-scale walls of
+the machine that produced it, and this script re-runs the smoke
+benchmarks (forest / hist / dist) and fails — exit 1 — when any tracked
+wall regressed by more than ``--factor`` (default 2×, absorbing CI-box
+noise while catching real cliffs like a lost jit cache or a fallen-back
+per-tree path).
+
+    python -m benchmarks.check_regression            # gate (exit 1 on >2x)
+    python -m benchmarks.check_regression --update    # rewrite the baseline
+    python -m benchmarks.check_regression --factor 3  # custom threshold
+
+Wired into the `-m slow` suite (tests/test_bench_regression.py).
+Structural counters (level-program counts) are compared EXACTLY — a
+changed dispatch count is a behavior change, not noise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BASELINE_PATH = os.environ.get("BENCH_SMOKE_BASELINE_JSON",
+                               os.path.join(os.path.dirname(__file__), "..",
+                                            "BENCH_smoke_baseline.json"))
+
+
+def _collect_smoke_metrics(tmpdir) -> dict:
+    """Run every smoke benchmark (JSON sinks redirected into `tmpdir`),
+    return {metric: value}.
+
+    Walls (``*_s``) are gated by ratio; ``programs::*`` counters exactly.
+    The BENCH_*_JSON overrides and the module reloads that pick them up
+    are undone on exit, so later bench runs in the same process write to
+    their normal locations again.
+    """
+    import contextlib
+    import importlib
+    import unittest.mock
+
+    from benchmarks import (dist_batch_bench, forest_batch_bench,
+                            hist_mode_bench)
+    mods = (forest_batch_bench, hist_mode_bench, dist_batch_bench)
+    with contextlib.ExitStack() as stack:
+        for mod in mods:           # LIFO: these run LAST, after the env
+            stack.callback(importlib.reload, mod)   # restore below
+        stack.enter_context(unittest.mock.patch.dict(os.environ, {
+            "BENCH_FOREST_BATCH_JSON": os.path.join(tmpdir, "forest.json"),
+            "BENCH_HIST_MODE_JSON": os.path.join(tmpdir, "hist.json"),
+            "BENCH_DIST_BATCH_JSON": os.path.join(tmpdir, "dist.json")}))
+        for mod in mods:
+            importlib.reload(mod)                   # pick up the overrides
+        return _run_smoke_benches(*mods)
+
+
+def _run_smoke_benches(forest_batch_bench, hist_mode_bench,
+                       dist_batch_bench) -> dict:
+    metrics: dict = {}
+    forest = forest_batch_bench.run(smoke=True)
+    for p in forest["points"]:
+        metrics[f"forest/batched_s/n{p['n']}"] = p["batched_s"]
+        metrics[f"forest/per_tree_s/n{p['n']}"] = p["per_tree_s"]
+        metrics[f"programs::forest/batched/n{p['n']}"] = \
+            p["level_programs_batched"]
+    hist = hist_mode_bench.run(smoke=True)
+    for p in hist["points"]:
+        metrics[f"hist/exact_s/n{p['n']}"] = p["exact_fit_s"]
+        for mode in p["hist"]:
+            metrics[f"hist/hist{mode['num_bins']}_s/n{p['n']}"] = \
+                mode["fit_s"]
+    dist = dist_batch_bench.run(smoke=True)
+    for c in dist["configs"]:
+        metrics[f"dist/{c['mode']}/batched_s"] = c["batched_s"]
+        metrics[f"programs::dist/{c['mode']}/batched"] = \
+            c["level_programs_batched"]
+    return metrics
+
+
+def check(fresh: dict, baseline: dict, factor: float) -> list[str]:
+    failures = []
+    for name, base in baseline.items():
+        if name not in fresh:
+            failures.append(f"metric disappeared: {name}")
+            continue
+        now = fresh[name]
+        if name.startswith("programs::"):
+            if now != base:
+                failures.append(
+                    f"{name}: level-program count changed {base} -> {now}")
+        elif base > 0 and now > factor * base:
+            failures.append(
+                f"{name}: {now:.3f}s vs baseline {base:.3f}s "
+                f"(x{now / base:.2f} > x{factor})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the committed smoke baseline")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="max tolerated slowdown ratio (default 2.0)")
+    args = ap.parse_args(argv)
+
+    import tempfile
+    with tempfile.TemporaryDirectory() as tmp:
+        fresh = _collect_smoke_metrics(tmp)
+
+    if args.update or not os.path.exists(BASELINE_PATH):
+        with open(BASELINE_PATH, "w") as f:
+            json.dump({"metrics": fresh,
+                       "note": ("smoke-scale walls (seconds) + level-"
+                                "program counters; refresh with "
+                                "`python -m benchmarks.check_regression "
+                                "--update` on the reference box")},
+                      f, indent=2)
+            f.write("\n")
+        print(f"baseline written: {BASELINE_PATH} ({len(fresh)} metrics)")
+        return 0
+
+    with open(BASELINE_PATH) as f:
+        baseline = json.load(f)["metrics"]
+    failures = check(fresh, baseline, args.factor)
+    for name in sorted(fresh):
+        base = baseline.get(name)
+        ref = f" (baseline {base})" if base is not None else " (NEW)"
+        print(f"  {name}: {fresh[name]}{ref}")
+    if failures:
+        print("\nPERF REGRESSION:\n  " + "\n  ".join(failures),
+              file=sys.stderr)
+        return 1
+    print(f"\nok: {len(baseline)} metrics within x{args.factor} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,6 +3,16 @@
 Prints ``name,us_per_call,derived`` CSV rows (repo convention).
 Roofline terms come from the dry-run (launch/dryrun.py) — see
 roofline_report.py and EXPERIMENTS.md §Roofline.
+
+Usage:
+  python -m benchmarks.run                  # every benchmark, full scale
+  python -m benchmarks.run all --smoke      # every benchmark, seconds-scale
+  python -m benchmarks.run forest --smoke   # one benchmark
+  python -m benchmarks.run dist             # sharded batched-vs-per-tree
+
+Perf-regression gate: ``python -m benchmarks.check_regression`` re-runs
+the smoke benchmarks and fails on >2× slowdown vs the committed
+``BENCH_smoke_baseline.json`` (wired into ``pytest -m slow``).
 """
 from __future__ import annotations
 
@@ -11,9 +21,10 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (fig1_auc_scaling, fig2_time_scaling,
-                            fig3_depth_metrics, forest_batch_bench,
-                            hist_mode_bench, kernel_bench, level_step_bench,
+    from benchmarks import (dist_batch_bench, fig1_auc_scaling,
+                            fig2_time_scaling, fig3_depth_metrics,
+                            forest_batch_bench, hist_mode_bench,
+                            kernel_bench, level_step_bench,
                             table1_complexity)
     args = [a for a in sys.argv[1:] if not a.startswith("--")]
     flags = {a for a in sys.argv[1:] if a.startswith("--")}
@@ -22,6 +33,8 @@ def main() -> None:
         raise SystemExit(f"unknown flags: {sorted(unknown)} "
                          "(supported: --smoke, --full)")
     only = args[0] if args else None
+    if only == "all":           # explicit umbrella (same as no selector)
+        only = None
     smoke = "--smoke" in flags
     full = "--full" in flags
     benches = {
@@ -38,7 +51,13 @@ def main() -> None:
         # writes BENCH_hist_mode.json (exact vs PLANET-style histogram
         # mode: AUC delta + fit-wall matrix); honours --smoke
         "hist": lambda: hist_mode_bench.run(smoke=smoke),
+        # writes BENCH_dist_batch.json (sharded training: batched vs
+        # per-tree level programs on the 2x4 host mesh); honours --smoke
+        "dist": lambda: dist_batch_bench.run(smoke=smoke),
     }
+    if only and only not in benches:
+        raise SystemExit(f"unknown benchmark {only!r} "
+                         f"(have: {', '.join(benches)}, or 'all')")
     print("name,us_per_call,derived")
     for name, fn in benches.items():
         if only and name != only:

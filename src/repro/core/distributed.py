@@ -1,202 +1,80 @@
 """DRF distribution on the TPU mesh (paper §2 worker topology → shard_map).
 
+The mesh machinery now lives in `repro.core.level.sharded` as
+`SplitEngine`s — the same engine objects plug into the ONE level plan that
+local training uses, so sharded training inherits the multi-tree batch
+axis, early-finish masking and device-resident pruning of
+`tree.build_forest` (DESIGN.md §5/§7).  This module keeps the historical
+factory entry points (each returns the corresponding engine; the engines
+are also callable with the original `supersplit_fn` signatures) plus the
+pieces that never were engines: the 1-bit condition broadcast and the
+dry-run level step.
+
 Topology mapping (DESIGN.md §5):
 
   * "model" axis  = the splitters: feature columns are sharded over it, each
     device searching optimal splits only on its own columns (paper: "each
     worker is assigned to a subset of columns ... read sequentially").
-  * "data" axis   = row range-partitions of the PRESORTED order (beyond-paper
-    2-D extension): shard r of a column holds sorted rows [r·n/w, (r+1)·n/w).
-    Exactness is preserved by resuming each shard's pass from the previous
-    shard's histogram/value state — an all_gather of (ℓ+1)·S floats per leaf
-    histogram, tiny compared to the data.
-  * partial supersplit merge = the gains all_gather (the paper's tree builder
-    "comparing the answers of the splitters").
+  * "data" axis   = row shards — range-partitions of the PRESORTED order
+    for the exact engine (beyond-paper 2-D extension), plain row order for
+    the histogram/categorical table engines.
+  * partial supersplit merge = the gains all_gather / table psum (the
+    paper's tree builder "comparing the answers of the splitters").
   * condition evaluation    = 1 bit per sample, psum over "model" (only the
     winning column's owner contributes) — the paper's "Dn bits in D
     allreduce" per tree.
 
-All functions here are shard_map'd and composable under jit, so the SAME
-code lowers for the 16×16 single-pod and (2,16,16) multi-pod production
-meshes in launch/dryrun.py.
+All engines are shard_map'd and composable under jit, so the SAME code
+lowers for the 16×16 single-pod and (2,16,16) multi-pod production meshes
+in launch/dryrun.py.
 """
 from __future__ import annotations
-
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-try:  # jax>=0.6 stable name, fall back to experimental
-    from jax import shard_map as _shard_map_mod
-    shard_map = _shard_map_mod.shard_map if hasattr(_shard_map_mod, "shard_map") else _shard_map_mod
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
-
 from repro.core import splits
+from repro.core.level.sharded import (ShardedCategorical,  # noqa: F401
+                                      ShardedExactNumeric,
+                                      ShardedHistNumeric, _shmap, shard_map)
 
-
-def _shmap(f, mesh, in_specs, out_specs):
-    try:    # jax>=0.6 spells the replication check "check_vma"
-        return shard_map(f, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)
-    except TypeError:  # jax 0.4.x spells it "check_rep"
-        return shard_map(f, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_rep=False)
-
-
-# ---------------------------------------------------------------------------
-# Column-sharded supersplit (the paper's splitter layout, Sliq/R style)
-# ---------------------------------------------------------------------------
 
 def make_column_sharded_supersplit(mesh, feature_axis: str = "model"):
-    """supersplit_fn for tree.build_tree: columns sharded over `feature_axis`.
+    """Exact engine, columns sharded over `feature_axis`, rows replicated —
+    the paper's splitter memory layout ("Sliq/R and DRF duplicate the class
+    list in each worker")."""
+    return ShardedExactNumeric(mesh=mesh, feature_axis=feature_axis,
+                               row_axis=None)
 
-    Row state (class list, bag weights, stats) is replicated — exactly the
-    paper's splitter memory layout ("Sliq/R and DRF duplicate the class list
-    in each worker").
-    """
-    def fn(sorted_vals, sorted_idx, leaf_of, w, stats, cand, Lp,
-           impurity, task, min_records):
-        backend = splits.best_numeric_split_segment
-
-        def local(sv, si, cl, leaf_of, w, stats):
-            def per_col(v, s, c):
-                lf, ww, st = leaf_of[s], w[s], stats[s]
-                return backend(v, lf, ww, st, c, Lp, impurity, task, min_records)
-            return jax.vmap(per_col)(sv, si, cl)
-
-        sharded = _shmap(
-            local, mesh,
-            in_specs=(P(feature_axis, None), P(feature_axis, None),
-                      P(feature_axis, None), P(None), P(None), P(None, None)),
-            out_specs=(P(feature_axis, None), P(feature_axis, None)))
-        return sharded(sorted_vals, sorted_idx, cand, leaf_of, w, stats)
-
-    return fn
-
-
-# ---------------------------------------------------------------------------
-# 2-D sharded supersplit: columns over "model", presorted rows over "data"
-# ---------------------------------------------------------------------------
 
 def make_2d_sharded_supersplit(mesh, feature_axis: str = "model",
                                row_axis: str = "data",
                                backend: str = "segment"):
-    """Exact supersplit with BOTH axes sharded (beyond-paper extension).
+    """Exact engine with BOTH axes sharded (beyond-paper extension): row
+    shards resume the presorted scan from the previous shard's
+    all_gathered histogram/value state — see
+    `level.sharded.ShardedExactNumeric`."""
+    return ShardedExactNumeric(mesh=mesh, feature_axis=feature_axis,
+                               row_axis=row_axis, backend=backend)
 
-    Per column: each row shard computes (a) its local per-leaf stat totals
-    and last in-bag value, (b) all_gathers them over `row_axis` (payload
-    (L+1)·S floats — independent of n), (c) forms the exclusive shard prefix
-    (h_init, v_init) and GLOBAL totals, and (d) runs the exact backend on its
-    local slice resuming from that state.  Partial bests are merged with a
-    lexicographic (gain, -shard) max so tie-breaking matches the sequential
-    scan order.
-    """
-    fn_backend = splits.NUMERIC_BACKENDS[backend]
-
-    def make(Lp, impurity, task, min_records):
-        def local(sv, si, leaf_of, w, stats, cl):
-            # sv/si: (m_local, n_local) slices of the presorted order.
-            def per_col(v, s, c):
-                lf, ww, st = leaf_of[s], w[s], stats[s]
-                inbag = (ww > 0) & (lf > 0)
-                contrib = jnp.where(inbag[:, None], st, 0.0)
-                loc_tot = jax.ops.segment_sum(contrib, lf, num_segments=Lp + 1)
-                loc_last = jax.ops.segment_max(
-                    jnp.where(inbag, v, -jnp.inf), lf, num_segments=Lp + 1)
-                all_tot = jax.lax.all_gather(loc_tot, row_axis)      # (W, L+1, S)
-                all_last = jax.lax.all_gather(loc_last, row_axis)    # (W, L+1)
-                r = jax.lax.axis_index(row_axis)
-                W = all_tot.shape[0]
-                before = (jnp.arange(W) < r)[:, None, None]
-                h_init = jnp.sum(jnp.where(before, all_tot, 0.0), axis=0)
-                totals = jnp.sum(all_tot, axis=0)
-                v_init = jnp.max(jnp.where(before[..., 0], all_last, -jnp.inf), axis=0)
-                v_init = jnp.where(jnp.isfinite(v_init), v_init, jnp.inf)  # "none" sentinel
-                g, t = fn_backend(v, lf, ww, st, c, Lp, impurity, task,
-                                  min_records, h_init=h_init, v_init=v_init,
-                                  totals=totals)
-                # merge over row shards: max gain, ties -> earliest shard
-                key = jnp.where(jnp.isfinite(g), g, -jnp.inf)
-                allg = jax.lax.all_gather(key, row_axis)             # (W, L+1)
-                allt = jax.lax.all_gather(t, row_axis)
-                win = jnp.argmax(allg, axis=0)  # first max = earliest shard (scan order)
-                gsel = jnp.take_along_axis(allg, win[None], 0)[0]
-                tsel = jnp.take_along_axis(allt, win[None], 0)[0]
-                return gsel, tsel
-
-            return jax.vmap(per_col)(sv, si, cl)
-
-        return local
-
-    def fn(sorted_vals, sorted_idx, leaf_of, w, stats, cand, Lp,
-           impurity, task, min_records):
-        local = make(Lp, impurity, task, min_records)
-        sharded = _shmap(
-            local, mesh,
-            in_specs=(P(feature_axis, row_axis), P(feature_axis, row_axis),
-                      P(None), P(None), P(None, None), P(feature_axis, None)),
-            out_specs=(P(feature_axis, None), P(feature_axis, None)))
-        return sharded(sorted_vals, sorted_idx, leaf_of, w, stats, cand)
-
-    return fn
-
-
-# ---------------------------------------------------------------------------
-# Histogram (PLANET-style) supersplit: psum of (bins × stats) tables
-# ---------------------------------------------------------------------------
 
 def make_hist_sharded_supersplit(mesh, feature_axis: str = "model",
-                                 row_axis: Optional[str] = "data"):
-    """Approximate supersplit_fn for `split_mode="hist"` (DESIGN.md §6).
+                                 row_axis="data"):
+    """Histogram engine for `split_mode="hist"`: per-shard (bin × stat)
+    tables merged by ONE psum of (L+1)·B·S floats per column — the paper's
+    network-complexity contrast with the exact all_gather, executable side
+    by side (DESIGN.md §6)."""
+    return ShardedHistNumeric(mesh=mesh, feature_axis=feature_axis,
+                              row_axis=row_axis)
 
-    Columns are sharded over `feature_axis` (the paper's splitter layout);
-    ROWS — plain row order, no presorted state — are sharded over `row_axis`
-    together with the class list / bag weights / stats.  Each shard
-    scatter-adds its local per-leaf (bin × stat) count table and a single
-    `psum` over `row_axis` merges them: (L+1)·B·S floats per column per
-    level, independent of n.
 
-    This is the paper's network-complexity contrast made executable: the
-    PLANET-style histogram merge is a fixed-size reduction of count tables,
-    whereas the exact 2-D supersplit (make_2d_sharded_supersplit) must
-    all_gather per-shard scan state (prefix histograms + last-seen values
-    + per-shard bests) so every row shard can resume the EXACT pass where
-    its predecessor stopped.  The price of the cheap merge is that only
-    `num_bins` thresholds per column are ever considered.
-
-    `row_axis=None` gives the column-sharded-only variant (rows replicated,
-    no psum).  Returns fn(bin_of, bin_edges, leaf_of, w, stats, cand, Lp,
-    impurity, task, min_records) -> (gains, thresholds), each (m, L+1) —
-    the hist-mode supersplit_fn signature of `tree._level_step_core`.  The
-    bucket count is read off bin_edges (shape (m, num_bins)), so the fn
-    always agrees with the TreeParams that produced the bucket state.
-    """
-
-    def fn(bin_of, bin_edges, leaf_of, w, stats, cand, Lp,
-           impurity, task, min_records):
-        def local(bo, be, cl, lf, ww, st):
-            def per_col(b, e, c):
-                table = splits.categorical_count_table(
-                    b, lf, ww, st, Lp, e.shape[0])
-                if row_axis is not None:
-                    table = jax.lax.psum(table, row_axis)    # the merge
-                return splits.best_numeric_split_histogram(
-                    table, e, c, impurity, task, min_records)
-            return jax.vmap(per_col)(bo, be, cl)
-
-        sharded = _shmap(
-            local, mesh,
-            in_specs=(P(feature_axis, row_axis), P(feature_axis, None),
-                      P(feature_axis, None), P(row_axis), P(row_axis),
-                      P(row_axis, None)),
-            out_specs=(P(feature_axis, None), P(feature_axis, None)))
-        return sharded(bin_of, bin_edges, cand, leaf_of, w, stats)
-
-    return fn
+def make_categorical_sharded_supersplit(mesh, feature_axis: str = "model",
+                                        row_axis="data"):
+    """Categorical table engine under the mesh (order-free psum merge);
+    requires m_cat divisible by the feature-axis size."""
+    return ShardedCategorical(mesh=mesh, feature_axis=feature_axis,
+                              row_axis=row_axis)
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,7 @@ instead of a per-tree Python loop with a retrace per tree (the per-tree
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax
@@ -27,6 +28,7 @@ import numpy as np
 
 from repro.core import bagging, presort, tree as tree_lib
 from repro.core.dataset import TabularDataset
+from repro.core.level.engines import SplitEngine
 
 
 # ---------------------------------------------------------------------------
@@ -59,9 +61,59 @@ class PackedForest:
     m_num: int
     iters: int               # max depth over trees + 1 (static descent bound)
 
+    FORMAT_VERSION = 1       # bump on any array-layout change
+
     @property
     def num_trees(self) -> int:
         return int(self.feature.shape[0])
+
+    # -- stable export path (ROADMAP "Serving") ------------------------
+    _ARRAYS = ("feature", "threshold", "is_cat", "cat_mask", "children",
+               "value")
+
+    def save(self, path) -> None:
+        """Serialize to ONE .npz file with a format-version field.
+
+        The file is self-contained: `PackedForest.load` + `predict_proba`
+        is a full batched-inference stack with no Tree objects, no
+        training code path, and no pickle (plain npz arrays only) — the
+        stable boundary a serving process loads across repo versions.
+        """
+        np.savez_compressed(
+            path,
+            format_version=np.int32(self.FORMAT_VERSION),
+            m_num=np.int32(self.m_num), iters=np.int32(self.iters),
+            **{k: np.asarray(getattr(self, k)) for k in self._ARRAYS})
+
+    @classmethod
+    def load(cls, path) -> "PackedForest":
+        """Load an .npz written by `save` (version-checked).
+
+        Accepts the same path string `save` was given: numpy appends
+        ".npz" to suffix-less filenames at save time, so retry with it.
+        """
+        import os
+        p = os.fspath(path)
+        if not os.path.exists(p) and not p.endswith(".npz"):
+            p += ".npz"
+        with np.load(p) as z:
+            version = int(z["format_version"])
+            if version != cls.FORMAT_VERSION:
+                raise ValueError(
+                    f"PackedForest format v{version} not supported "
+                    f"(this build reads v{cls.FORMAT_VERSION})")
+            return cls(m_num=int(z["m_num"]), iters=int(z["iters"]),
+                       **{k: jnp.asarray(z[k]) for k in cls._ARRAYS})
+
+    def predict_proba(self, num, cat, reduce_mean: bool = True):
+        """Batched inference straight off the packed arrays: ONE jitted
+        call for the whole forest — (B, C) forest mean, or (T, B, C) with
+        `reduce_mean=False` (see `examples/forest_export.py`)."""
+        return _forest_predict(
+            self.feature, self.threshold, self.is_cat, self.cat_mask,
+            self.children, self.value, jnp.asarray(num, jnp.float32),
+            jnp.asarray(cat, jnp.int32), self.m_num, self.iters,
+            reduce_mean)
 
 
 def pack_trees(trees: list) -> PackedForest:
@@ -189,15 +241,22 @@ class RandomForest:
         return int(max(1, min(self.num_trees, 16, (1 << 26) // per_tree)))
 
     def fit(self, ds: TabularDataset, collect_stats: bool = False,
-            supersplit_fn=None) -> "RandomForest":
+            supersplit_fn=None, engine=None,
+            cat_engine=None) -> "RandomForest":
         """Train the forest; one batched device program per depth level.
 
         Trees are chunked into `tree_batch`-sized groups and each group is
         built by `tree.build_forest` — the fused level step vmapped over
-        the tree axis.  Configurations the batched builder does not cover
-        (a distributed `supersplit_fn`, Sprint row pruning) fall back to
-        the per-tree `tree.build_tree` loop; the trees are identical either
-        way, only the dispatch count changes.
+        the tree axis.  EVERY mode runs through that one plan: local or
+        mesh-sharded engines (`engine=` / `cat_engine=`, see
+        `repro.core.level`), exact or hist, with or without Sprint pruning
+        (`prune_closed_frac`).  The only fallback to the per-tree
+        `tree.build_tree` loop is a LEGACY bare `supersplit_fn` closure
+        (the pre-engine API), which composes with neither the tree-axis
+        vmap nor the batch-native protocol — passing one emits a
+        UserWarning and forces `tree_batch=1`; pass a `SplitEngine`
+        instead to keep tree batching.  Trees are identical either way,
+        only the dispatch count changes.
         """
         ds.validate()
         self.num_classes = ds.num_classes
@@ -213,16 +272,31 @@ class RandomForest:
                   sorted_vals=sorted_vals, sorted_idx=sorted_idx,
                   arities=ds.arities, num_classes=ds.num_classes,
                   params=self.params, seed=self.seed,
-                  collect_stats=collect_stats)
+                  collect_stats=collect_stats,
+                  engine=engine, cat_engine=cat_engine)
         if self.params.split_mode == "hist" and ds.m_num:
             # hist mode: quantize once per forest (the PLANET-style fixed
             # bucket budget), shared by every tree/level like the presort
             bin_of, bin_edges = presort.quantize(ds.num, sorted_vals,
                                                  self.params.num_bins)
             kw.update(bin_of=bin_of, bin_edges=bin_edges)
+        if supersplit_fn is not None and engine is not None:
+            raise ValueError(
+                "pass either engine= (a SplitEngine) or supersplit_fn=, "
+                "not both — one of them would be silently ignored")
+        if isinstance(supersplit_fn, SplitEngine):
+            # the engine API replaces supersplit_fn; accept it here too
+            kw["engine"] = supersplit_fn
+            supersplit_fn = None
         tb = self._resolve_tree_batch(ds)
-        if supersplit_fn is not None or self.params.prune_closed_frac < 1.0:
-            tb = 1                      # per-tree-only configurations
+        if supersplit_fn is not None:
+            warnings.warn(
+                "legacy supersplit_fn closures force the per-tree builder "
+                "(tree_batch=1, one level program per depth PER TREE); "
+                "pass a repro.core.level SplitEngine (engine=...) to keep "
+                "the batched one-program-per-depth path",
+                UserWarning, stacklevel=2)
+            tb = 1                      # per-tree-only configuration
         self.trees, self.level_stats = [], []
         if tb > 1:
             for lo in range(0, self.num_trees, tb):

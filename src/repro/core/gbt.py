@@ -97,7 +97,11 @@ class GBTModel:
     m: int = 0
     packed: Optional[forest_lib.PackedForest] = None
 
-    def fit(self, ds: TabularDataset) -> "GBTModel":
+    def fit(self, ds: TabularDataset, engine=None,
+            cat_engine=None) -> "GBTModel":
+        """Fit the boosted rounds; `engine`/`cat_engine` optionally select
+        `repro.core.level` SplitEngines (e.g. the mesh-sharded ones) — each
+        round's tree runs through the same LevelPlan as RandomForest."""
         p = self.params
         self.m = ds.m
         y = np.asarray(ds.labels, np.float64)
@@ -139,7 +143,8 @@ class GBTModel:
                 sorted_vals=sorted_vals, sorted_idx=sorted_idx,
                 arities=ds.arities, num_classes=2,
                 params=tparams, seed=p.seed, tree_idx=t,
-                bin_of=bin_of, bin_edges=bin_edges)
+                bin_of=bin_of, bin_edges=bin_edges,
+                engine=engine, cat_engine=cat_engine)
             self.trees.append(tr)
             step = np.asarray(tr.predict_raw(ds.num, ds.cat))[:, 0]
             f = f + p.learning_rate * step

@@ -1,0 +1,29 @@
+"""The execution-plan layer: one `LevelPlan` for every training mode.
+
+A depth level of Alg. 2 is always the same composition — candidate draw →
+engine supersplits → winner argmax → condition eval → reassign → next
+totals — no matter whether the numeric search is exact or histogram, local
+or mesh-sharded.  This package separates the split *strategy* (a
+`SplitEngine`, woody/PLANET style) from the level *plan* that composes it,
+so every mode combination runs through the SAME fused device program per
+depth, including the multi-tree batch axis (DESIGN.md §7).
+
+  engines.py   SplitEngine protocol + the local engines
+               (exact numeric, histogram numeric, categorical table)
+  sharded.py   the mesh engines (shard_map'd table/scan reductions,
+               psum/all_gather supersplit merges)
+  plan.py      LevelPlan + the fused per-depth device programs
+"""
+from repro.core.level.engines import (CategoricalTable, ExactNumeric,
+                                      HistNumeric, LegacyFn, LevelInputs,
+                                      LevelStatics, SplitEngine)
+from repro.core.level.plan import LevelPlan, make_plan
+from repro.core.level.sharded import (ShardedCategorical, ShardedExactNumeric,
+                                      ShardedHistNumeric)
+
+__all__ = [
+    "SplitEngine", "LevelInputs", "LevelStatics",
+    "ExactNumeric", "HistNumeric", "CategoricalTable", "LegacyFn",
+    "ShardedExactNumeric", "ShardedHistNumeric", "ShardedCategorical",
+    "LevelPlan", "make_plan",
+]

@@ -1,0 +1,250 @@
+"""SplitEngine protocol + the local (single-device) engines.
+
+A `SplitEngine` answers ONE question per depth level: "for every open
+leaf, what is the best split on my features?" — the paper's supersplit
+query.  The level plan (plan.py) owns everything around that answer
+(candidate draw, winner argmax, condition eval, reassignment), so an
+engine only ever sees per-leaf state and returns per-leaf bests:
+
+    numeric engines:      (gains (m_num, L+1), thresholds (m_num, L+1))
+    categorical engines:  (gains (m_cat, L+1), left-masks (m_cat, L+1, V))
+
+Engines are FROZEN, HASHABLE dataclasses: they ride through `jax.jit` as
+static arguments of the fused level step, so choosing an engine chooses a
+lowering, not a runtime branch.  Local engines are called per tree inside
+the plan's tree-axis vmap / lax.map; mesh engines (sharded.py) declare
+`batch_native = True` and are instead called ONCE per level with a leading
+tree axis, outside the vmap, because `shard_map` composes with an explicit
+batch axis far more robustly than with a vmap batching rule.
+
+`LevelInputs` is the full per-tree view of the level state; every engine
+reads only the fields its layout needs (the drivers pass zero-size dummies
+for the rest, see `SplitEngine.needs_sorted` / `needs_bins`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import splits
+
+
+class LevelInputs(NamedTuple):
+    """Per-tree level state handed to engines (see tree.py for shapes).
+
+    Batch-native engines receive the same tuple with a leading tree axis T
+    on the per-tree fields (`ord_idx`, `leaf_of`, `w`, `stats`, `totals`,
+    `row_counts`); the shared read-only fields (`num`, `cat`, `labels`,
+    `sorted_vals`, `sorted_idx`, `bin_of`, `bin_edges`) never batch.
+    """
+    num: jnp.ndarray           # (n, m_num) raw numeric columns
+    cat: jnp.ndarray           # (n, m_cat) raw categorical columns
+    labels: jnp.ndarray        # (n,) class ids / regression targets
+    sorted_vals: jnp.ndarray   # (m_num, n) presorted values (or (0, 0))
+    sorted_idx: jnp.ndarray    # (m_num, n) presorted row ids (or (0, 0))
+    bin_of: jnp.ndarray        # (m_num, n) hist bucket ids (or (0, 0))
+    bin_edges: jnp.ndarray     # (m_num, B) hist bucket edges (or (0, 0))
+    ord_idx: jnp.ndarray       # (m_num, n) (leaf, value)-sorted order (or (0, 0))
+    leaf_of: jnp.ndarray       # (n,) leaf id per row, 0 = closed
+    w: jnp.ndarray             # (n,) bag weights
+    stats: jnp.ndarray         # (n, S) row stats
+    totals: jnp.ndarray        # (L+1, S) per-leaf stat totals
+    row_counts: jnp.ndarray    # (L+1,) rows per leaf (leaf-ordered layout)
+
+
+class LevelStatics(NamedTuple):
+    """The hashable static config shared by every engine call."""
+    m_num: int
+    m_cat: int
+    max_arity: int
+    num_classes: int
+    num_bins: int
+    impurity: str
+    task: str
+    min_records: float
+
+
+class SplitEngine:
+    """Base protocol.  Subclasses are frozen dataclasses (hashable)."""
+
+    kind: str = "numeric"       # "numeric" | "categorical"
+    batch_native: bool = False  # True: called once per level with a T axis
+    uses_ord: bool = False      # True: wants the incremental leaf order
+    needs_sorted: bool = False  # True: wants sorted_vals/sorted_idx
+    needs_bins: bool = False    # True: wants bin_of/bin_edges (hist layout)
+
+    def supersplits(self, inp: LevelInputs, st: LevelStatics, Lp: int,
+                    cand: jnp.ndarray):
+        """Per-tree supersplit: cand is (m, L+1) bool (leaf 0 = False)."""
+        raise NotImplementedError
+
+    def supersplits_batched(self, inp: LevelInputs, st: LevelStatics,
+                            Lp: int, cand: jnp.ndarray):
+        """Whole-batch supersplit (batch-native engines only): per-tree
+        fields of `inp` and `cand` carry a leading tree axis T."""
+        raise NotImplementedError
+
+    def row_shards(self) -> int:
+        """Row-shard count the driver must keep n divisible by (pruning)."""
+        return 1
+
+
+# ---------------------------------------------------------------------------
+# Shared per-column helpers (also used by the sharded engines)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _gather_sorted_level(sorted_idx, leaf_of, w, stats):
+    """Per-column gathers of the level state in presorted order."""
+    return leaf_of[sorted_idx], w[sorted_idx], stats[sorted_idx]
+
+
+def _numeric_supersplits(backend, sorted_vals, sorted_idx, leaf_of, w, stats,
+                         cand, Lp, impurity, task, min_records):
+    """vmap the chosen exact backend over numerical columns.
+
+    sorted_vals/sorted_idx: (m_num, n); cand: (m_num, Lp+1).
+    Returns gains (m_num, Lp+1), thresholds (m_num, Lp+1).
+    """
+    fn = splits.NUMERIC_BACKENDS[backend]
+    def per_col(v, si, cl):
+        lf, ww, st = _gather_sorted_level(si, leaf_of, w, stats)
+        return fn(v, lf, ww, st, cl, Lp, impurity, task, min_records)
+    return jax.vmap(per_col)(sorted_vals, sorted_idx, cand)
+
+
+def _categorical_supersplits(cat_cols, leaf_of, w, stats, cand, Lp, max_arity,
+                             impurity, task, min_records):
+    """vmap exact categorical search over columns padded to max_arity."""
+    def per_col(x, cl):
+        return splits.best_categorical_split(
+            x, leaf_of, w, stats, cl, Lp, max_arity, impurity, task, min_records)
+    return jax.vmap(per_col)(cat_cols, cand)
+
+
+# ---------------------------------------------------------------------------
+# Local engines
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ExactNumeric(SplitEngine):
+    """The paper's midpoint-exhaustive numeric search, all local backends.
+
+    backend = "segment" (default) reads the incrementally-maintained
+    (leaf, value)-sorted layout when the driver provides it (DESIGN.md §2)
+    and falls back to the presorted counting-sort path otherwise;
+    "scan" is the faithful Alg. 1 streaming pass; "kernel" the Pallas
+    split_scan path.
+    """
+    backend: str = "segment"
+
+    needs_sorted = True
+
+    @property
+    def uses_ord(self) -> bool:
+        return self.backend == "segment"
+
+    def supersplits(self, inp, st, Lp, cand):
+        if self.backend == "kernel":
+            from repro.kernels import ops as kops
+            return kops.split_scan_supersplit(
+                inp.sorted_vals, inp.sorted_idx, inp.leaf_of, inp.w,
+                inp.labels, cand, Lp, st.impurity, st.task, st.min_records,
+                num_classes=st.num_classes)
+        if inp.ord_idx.size:
+            # leaf-ordered fast path: no per-level counting sort.  Shared
+            # per-leaf totals are exact for classification (integer bag
+            # counts); regression reduces per column to keep the reference
+            # builder's float summation order bit-for-bit.
+            tot = inp.totals if st.task == "classification" else None
+            lf_pos = inp.leaf_of[inp.ord_idx[0]]    # same for every column
+            inbag = (inp.w > 0)[inp.ord_idx] & (lf_pos > 0)[None]
+            ord_vals = jnp.take_along_axis(inp.num.T, inp.ord_idx, axis=1)
+            return splits.best_numeric_split_leaf_ordered(
+                ord_vals, lf_pos, inbag, inp.stats[inp.ord_idx], cand, Lp,
+                st.impurity, st.task, st.min_records, totals=tot,
+                row_counts=inp.row_counts)
+        return _numeric_supersplits(
+            self.backend, inp.sorted_vals, inp.sorted_idx, inp.leaf_of,
+            inp.w, inp.stats, cand, Lp, st.impurity, st.task, st.min_records)
+
+
+@dataclasses.dataclass(frozen=True)
+class HistNumeric(SplitEngine):
+    """PLANET-style histogram numeric search (DESIGN.md §6): per-leaf
+    (bin × stat) count tables through the categorical scatter-add path
+    (Pallas `cat_hist` under backend="kernel"), bucket boundaries scored by
+    `splits.best_numeric_split_histogram`."""
+    backend: str = "segment"
+
+    needs_bins = True
+
+    def supersplits(self, inp, st, Lp, cand):
+        if self.backend == "kernel":
+            from repro.kernels import ops as kops
+            tables = kops.categorical_tables(
+                inp.bin_of, inp.leaf_of, inp.w, inp.labels, V=st.num_bins,
+                Lp=Lp, task=st.task, num_classes=st.num_classes)
+        else:
+            tables = jax.vmap(
+                lambda b: splits.categorical_count_table(
+                    b, inp.leaf_of, inp.w, inp.stats, Lp, st.num_bins))(
+                inp.bin_of)
+        return jax.vmap(
+            lambda tb, e, c: splits.best_numeric_split_histogram(
+                tb, e, c, st.impurity, st.task, st.min_records))(
+            tables, inp.bin_edges, cand)
+
+
+@dataclasses.dataclass(frozen=True)
+class CategoricalTable(SplitEngine):
+    """Exact categorical search from (leaf × category × stat) count tables
+    + Breiman ordering; backend="kernel" builds the tables with the Pallas
+    cat_hist kernel."""
+    backend: str = "segment"
+
+    kind = "categorical"
+
+    def supersplits(self, inp, st, Lp, cand):
+        if self.backend == "kernel":
+            from repro.kernels import ops as kops
+            tables = kops.categorical_tables(
+                inp.cat.T, inp.leaf_of, inp.w, inp.labels, V=st.max_arity,
+                Lp=Lp, task=st.task, num_classes=st.num_classes)
+            return jax.vmap(
+                lambda tb, c: splits.best_categorical_split_from_table(
+                    tb, c, st.impurity, st.task, st.min_records))(
+                tables, cand)
+        return _categorical_supersplits(
+            inp.cat.T, inp.leaf_of, inp.w, inp.stats, cand, Lp,
+            st.max_arity, st.impurity, st.task, st.min_records)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)   # identity hash: one trace
+class LegacyFn(SplitEngine):                    # per closure, as before
+    """Adapter for a bare `supersplit_fn` closure (the pre-SplitEngine
+    API).  Per-tree only: `RandomForest.fit` warns and routes these to the
+    per-tree builder, because an arbitrary closure composes with neither
+    the tree-axis vmap nor the batch-native protocol."""
+    fn: Callable
+    hist: bool = False          # hist-mode signature (bin_of, bin_edges, ...)
+
+    @property
+    def needs_sorted(self) -> bool:     # type: ignore[override]
+        return not self.hist
+
+    @property
+    def needs_bins(self) -> bool:       # type: ignore[override]
+        return self.hist
+
+    def supersplits(self, inp, st, Lp, cand):
+        if self.hist:
+            return self.fn(inp.bin_of, inp.bin_edges, inp.leaf_of, inp.w,
+                           inp.stats, cand, Lp, st.impurity, st.task,
+                           st.min_records)
+        return self.fn(inp.sorted_vals, inp.sorted_idx, inp.leaf_of, inp.w,
+                       inp.stats, cand, Lp, st.impurity, st.task,
+                       st.min_records)

@@ -1,0 +1,284 @@
+"""Mesh-sharded SplitEngines (paper §2 worker topology → shard_map).
+
+Topology mapping (DESIGN.md §5):
+
+  * `feature_axis` ("model") = the splitters: feature columns are sharded
+    over it, each device searching optimal splits only on its own columns
+    (paper: "each worker is assigned to a subset of columns ... read
+    sequentially").
+  * `row_axis` ("data") = row shards.  For the exact engine these are
+    range-partitions of the PRESORTED order (beyond-paper 2-D extension):
+    shard r of a column holds sorted rows [r·n/w, (r+1)·n/w), and exactness
+    is preserved by resuming each shard's pass from the previous shard's
+    histogram/value state — an all_gather of (ℓ+1)·S floats per leaf
+    histogram, tiny compared to the data.  For the histogram and
+    categorical engines rows shard in PLAIN row order and a single `psum`
+    merges the fixed-size (ℓ+1)·V·S count tables — the paper's
+    network-complexity contrast, executable side by side.
+
+Every engine here is `batch_native`: the fused level step calls it ONCE
+per depth with a leading tree axis T, and the shard_map body vmaps over
+trees INSIDE the mesh program.  Sharded training therefore inherits the
+multi-tree batch axis, the early-finish masking, and the device-resident
+pruning of the batched builder with no special-cased host loop — D (not
+T·D) device dispatches per forest, same as local training.
+
+Engines also implement `__call__` with the original `supersplit_fn`
+signatures, so existing call sites (launch/dryrun.py, older tests) keep
+working unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import splits
+from repro.core.level.engines import SplitEngine
+
+try:  # jax>=0.6 stable name, fall back to experimental
+    from jax import shard_map as _shard_map_mod
+    shard_map = _shard_map_mod.shard_map if hasattr(_shard_map_mod, "shard_map") else _shard_map_mod
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
+
+def _shmap(f, mesh, in_specs, out_specs):
+    try:    # jax>=0.6 spells the replication check "check_vma"
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+    except TypeError:  # jax 0.4.x spells it "check_rep"
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class _MeshEngine(SplitEngine):
+    mesh: object = None         # jax.sharding.Mesh (hashable)
+    feature_axis: str = "model"
+    row_axis: Optional[str] = "data"
+
+    batch_native = True
+
+    def row_shards(self) -> int:
+        if self.row_axis is None:
+            return 1
+        return int(self.mesh.shape[self.row_axis])
+
+
+# ---------------------------------------------------------------------------
+# Exact numeric engine: columns over "model", presorted rows over "data"
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedExactNumeric(_MeshEngine):
+    """Exact supersplit with columns and (optionally) presorted rows sharded.
+
+    Per column: each row shard computes (a) its local per-leaf stat totals
+    and last in-bag value, (b) all_gathers them over `row_axis` (payload
+    (L+1)·S floats — independent of n), (c) forms the exclusive shard
+    prefix (h_init, v_init) and GLOBAL totals, and (d) runs the exact
+    backend on its local slice resuming from that state.  Partial bests
+    merge with a first-max over shards, matching the sequential scan
+    order's tie-breaking.  `row_axis=None` is the paper's column-only
+    splitter layout (rows replicated, no collectives).
+    """
+    backend: str = "segment"
+
+    needs_sorted = True
+
+    def supersplits(self, inp, st, Lp, cand):
+        g, t = self._search(inp.sorted_vals, inp.sorted_idx,
+                            inp.leaf_of[None], inp.w[None], inp.stats[None],
+                            cand[None], Lp, st.impurity, st.task,
+                            st.min_records)
+        return g[0], t[0]
+
+    def supersplits_batched(self, inp, st, Lp, cand):
+        return self._search(inp.sorted_vals, inp.sorted_idx, inp.leaf_of,
+                            inp.w, inp.stats, cand, Lp, st.impurity,
+                            st.task, st.min_records)
+
+    def __call__(self, sorted_vals, sorted_idx, leaf_of, w, stats, cand,
+                 Lp, impurity, task, min_records):
+        """Legacy per-tree supersplit_fn signature."""
+        g, t = self._search(sorted_vals, sorted_idx, leaf_of[None], w[None],
+                            stats[None], cand[None], Lp, impurity, task,
+                            min_records)
+        return g[0], t[0]
+
+    def _search(self, sorted_vals, sorted_idx, leaf_of, w, stats, cand,
+                Lp, impurity, task, min_records):
+        F, R = self.feature_axis, self.row_axis
+        fn_backend = splits.NUMERIC_BACKENDS[self.backend]
+
+        def local(sv, si, cl, lf, ww, stt):
+            # sv/si: (m_loc, n_loc) shard of the presorted order (GLOBAL
+            # row ids); cl (T, m_loc, L+1); lf/ww (T, n); stt (T, n, S)
+            # replicated — the paper's splitter memory layout ("Sliq/R and
+            # DRF duplicate the class list in each worker").
+            def per_tree(cl_t, lf_t, ww_t, st_t):
+                def per_col(v, s, c):
+                    lfs, wws, sts = lf_t[s], ww_t[s], st_t[s]
+                    if R is None:
+                        return fn_backend(v, lfs, wws, sts, c, Lp, impurity,
+                                          task, min_records)
+                    inbag = (wws > 0) & (lfs > 0)
+                    contrib = jnp.where(inbag[:, None], sts, 0.0)
+                    loc_tot = jax.ops.segment_sum(contrib, lfs,
+                                                  num_segments=Lp + 1)
+                    loc_last = jax.ops.segment_max(
+                        jnp.where(inbag, v, -jnp.inf), lfs,
+                        num_segments=Lp + 1)
+                    all_tot = jax.lax.all_gather(loc_tot, R)   # (W, L+1, S)
+                    all_last = jax.lax.all_gather(loc_last, R)  # (W, L+1)
+                    r = jax.lax.axis_index(R)
+                    W = all_tot.shape[0]
+                    before = (jnp.arange(W) < r)[:, None, None]
+                    h_init = jnp.sum(jnp.where(before, all_tot, 0.0), axis=0)
+                    totals = jnp.sum(all_tot, axis=0)
+                    v_init = jnp.max(jnp.where(before[..., 0], all_last,
+                                               -jnp.inf), axis=0)
+                    v_init = jnp.where(jnp.isfinite(v_init), v_init,
+                                       jnp.inf)   # "none" sentinel
+                    g, t = fn_backend(v, lfs, wws, sts, c, Lp, impurity,
+                                      task, min_records, h_init=h_init,
+                                      v_init=v_init, totals=totals)
+                    # merge over row shards: max gain, ties -> earliest
+                    # shard (the sequential scan order)
+                    key = jnp.where(jnp.isfinite(g), g, -jnp.inf)
+                    allg = jax.lax.all_gather(key, R)           # (W, L+1)
+                    allt = jax.lax.all_gather(t, R)
+                    win = jnp.argmax(allg, axis=0)
+                    gsel = jnp.take_along_axis(allg, win[None], 0)[0]
+                    tsel = jnp.take_along_axis(allt, win[None], 0)[0]
+                    return gsel, tsel
+
+                return jax.vmap(per_col)(sv, si, cl_t)
+
+            return jax.vmap(per_tree)(cl, lf, ww, stt)
+
+        sharded = _shmap(
+            local, self.mesh,
+            in_specs=(P(F, R), P(F, R), P(None, F, None),
+                      P(None), P(None), P(None, None)),
+            out_specs=(P(None, F, None), P(None, F, None)))
+        return sharded(sorted_vals, sorted_idx, cand, leaf_of, w, stats)
+
+
+# ---------------------------------------------------------------------------
+# Histogram engine: psum of (bins × stats) tables
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedHistNumeric(_MeshEngine):
+    """Approximate supersplit for `split_mode="hist"` (DESIGN.md §6).
+
+    Columns shard over `feature_axis`; ROWS — plain row order, no presorted
+    state — shard over `row_axis` together with the class list / bag
+    weights / stats.  Each shard scatter-adds its local per-leaf
+    (bin × stat) count table and a single `psum` merges them: (L+1)·B·S
+    floats per column per level, independent of n — the PLANET-style
+    fixed-size merge vs the exact engine's resumable-scan all_gather.
+    `row_axis=None` gives the column-sharded-only variant (no psum).
+    The bucket count is read off bin_edges, so the engine always agrees
+    with the TreeParams that produced the bucket state.
+    """
+
+    needs_bins = True
+
+    def supersplits(self, inp, st, Lp, cand):
+        g, t = self._search(inp.bin_of, inp.bin_edges, inp.leaf_of[None],
+                            inp.w[None], inp.stats[None], cand[None], Lp,
+                            st.impurity, st.task, st.min_records)
+        return g[0], t[0]
+
+    def supersplits_batched(self, inp, st, Lp, cand):
+        return self._search(inp.bin_of, inp.bin_edges, inp.leaf_of, inp.w,
+                            inp.stats, cand, Lp, st.impurity, st.task,
+                            st.min_records)
+
+    def __call__(self, bin_of, bin_edges, leaf_of, w, stats, cand, Lp,
+                 impurity, task, min_records):
+        """Legacy per-tree hist supersplit_fn signature."""
+        g, t = self._search(bin_of, bin_edges, leaf_of[None], w[None],
+                            stats[None], cand[None], Lp, impurity, task,
+                            min_records)
+        return g[0], t[0]
+
+    def _search(self, bin_of, bin_edges, leaf_of, w, stats, cand, Lp,
+                impurity, task, min_records):
+        F, R = self.feature_axis, self.row_axis
+
+        def local(bo, be, cl, lf, ww, stt):
+            def per_tree(cl_t, lf_t, ww_t, st_t):
+                def per_col(b, e, c):
+                    table = splits.categorical_count_table(
+                        b, lf_t, ww_t, st_t, Lp, e.shape[0])
+                    if R is not None:
+                        table = jax.lax.psum(table, R)      # the merge
+                    return splits.best_numeric_split_histogram(
+                        table, e, c, impurity, task, min_records)
+                return jax.vmap(per_col)(bo, be, cl_t)
+            return jax.vmap(per_tree)(cl, lf, ww, stt)
+
+        sharded = _shmap(
+            local, self.mesh,
+            in_specs=(P(F, R), P(F, None), P(None, F, None),
+                      P(None, R), P(None, R), P(None, R, None)),
+            out_specs=(P(None, F, None), P(None, F, None)))
+        return sharded(bin_of, bin_edges, cand, leaf_of, w, stats)
+
+
+# ---------------------------------------------------------------------------
+# Categorical engine: psum of (category × stats) tables
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedCategorical(_MeshEngine):
+    """Exact categorical table engine under the mesh: the paper's
+    'attribute value × class' count tables are built per row shard and
+    merged by ONE psum of (L+1)·V·S floats per column (categorical tables
+    are order-free, so the merge is exact); the Breiman-ordered prefix-cut
+    scoring then runs replicated per column owner.  Requires m_cat
+    divisible by the feature-axis size (pad columns or keep the local
+    engine otherwise — `make_plan` defaults to local categoricals)."""
+
+    kind = "categorical"
+
+    def supersplits(self, inp, st, Lp, cand):
+        g, m = self._search(inp.cat.T, inp.leaf_of[None], inp.w[None],
+                            inp.stats[None], cand[None], Lp, st.max_arity,
+                            st.impurity, st.task, st.min_records)
+        return g[0], m[0]
+
+    def supersplits_batched(self, inp, st, Lp, cand):
+        return self._search(inp.cat.T, inp.leaf_of, inp.w, inp.stats, cand,
+                            Lp, st.max_arity, st.impurity, st.task,
+                            st.min_records)
+
+    def _search(self, cat_cols, leaf_of, w, stats, cand, Lp, max_arity,
+                impurity, task, min_records):
+        F, R = self.feature_axis, self.row_axis
+
+        def local(xc, cl, lf, ww, stt):
+            def per_tree(cl_t, lf_t, ww_t, st_t):
+                def per_col(x, c):
+                    table = splits.categorical_count_table(
+                        x, lf_t, ww_t, st_t, Lp, max_arity)
+                    if R is not None:
+                        table = jax.lax.psum(table, R)
+                    return splits.best_categorical_split_from_table(
+                        table, c, impurity, task, min_records)
+                return jax.vmap(per_col)(xc, cl_t)
+            return jax.vmap(per_tree)(cl, lf, ww, stt)
+
+        sharded = _shmap(
+            local, self.mesh,
+            in_specs=(P(F, R), P(None, F, None), P(None, R), P(None, R),
+                      P(None, R, None)),
+            out_specs=(P(None, F, None), P(None, F, None, None)))
+        return sharded(cat_cols, cand, leaf_of, w, stats)

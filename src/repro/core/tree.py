@@ -1,4 +1,4 @@
-"""Level-by-level decision tree builder (paper Alg. 2) + flat tree arrays.
+"""Level-by-level decision tree builders (paper Alg. 2) + flat tree arrays.
 
 The *tree builder* is the control plane (host Python, like the paper's tree
 builder workers which "do not have access to the dataset"); the per-level
@@ -7,30 +7,28 @@ the paper's splitters).  All nodes of a depth are split together, so the
 whole dataset is scanned once per candidate feature per LEVEL — never per
 node — which is the paper's central complexity win over Sprint.
 
-Data-plane structure (this is the hot path of the whole repo):
+This module is the HOST DRIVER layer only.  The data plane lives in
+`repro.core.level`: a `LevelPlan` composes a numeric and a categorical
+`SplitEngine` (exact / histogram × local / mesh-sharded) into ONE fused
+jitted program per depth level (DESIGN.md §7).  The drivers here own the
+flat-tree bookkeeping (`_NodeAccum`), the frontier padding, the Sprint
+pruning switch, and the per-level host protocol:
 
-  * `build_tree` runs ONE fused jitted program per depth level
-    (`_fused_level_step`): candidate draw, numeric supersplit (any
-    backend), categorical supersplit, cross-feature winner argmax,
-    condition evaluation (Alg. 2 step 5), leaf reassignment (step 6) and
-    next-level leaf totals, all with device-resident `leaf_of`/`stats`/`w`
-    state.  The host fetches exactly one small per-level struct (winning
-    feature / threshold / mask / gain per open leaf) for node bookkeeping —
-    the "one struct per level" protocol (DESIGN.md).
-  * For the default `segment` backend the fused step also maintains a
-    per-column (leaf, value)-sorted row order incrementally: children are
-    stable partitions of the parent's contiguous block, an O(n) segmented
-    cumsum per level instead of the per-level O(n log n) counting sort.
-  * `build_forest` trains a whole BATCH of trees per level program — the
-    same fused step vmapped (or lax.map'd) over a leading tree axis, T·D →
-    D dispatches per forest, bit-identical per tree (DESIGN.md §3).
-  * `build_tree_reference` is the pre-fusion builder (one jitted call per
-    piece, numpy round-trips between them).  It is kept as the executable
-    specification: parity tests assert the fused builder reproduces its
-    trees exactly, and benchmarks/level_step_bench.py measures the speedup.
+  * `build_tree` — one tree, one fused program per depth
+    (`level.plan._fused_level_step`); the fallback for legacy
+    `supersplit_fn` closures, otherwise prefer `build_forest`.
+  * `build_forest` — a whole BATCH of trees per level program (vmap /
+    lax.map over a leading tree axis, T·D → D dispatches, DESIGN.md §3),
+    bit-identical per tree.  The host loop is PIPELINED: each level's
+    Python bookkeeping (`_grow_level`, node values) is deferred until
+    after the NEXT level's program has been dispatched, so host work
+    overlaps device compute; transfers start with `copy_to_host_async`.
+  * `build_tree_reference` (repro.core.reference) — the pre-fusion seed
+    builder, kept as the executable specification the fused builders must
+    reproduce bit-for-bit.
 
 Per-level network/disk accounting (paper Table 1) is recorded in
-`LevelStats` by the builder: one bit per sample per level broadcast
+`LevelStats` by the builders: one bit per sample per level broadcast
 ("Dn bits in D allreduce"), the ⌈log2(ℓ+1)⌉·n class-list bits, and the
 number of sequential passes over the data.
 """
@@ -45,7 +43,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bagging, class_list, presort, splits
+from repro.core import bagging, class_list, presort, pruning, splits
+from repro.core.level.engines import LegacyFn, SplitEngine
+from repro.core.level.plan import (_BATCH_STEP_CALLS, _BATCH_STEP_TRACES,
+                                   _BATCH_VMAP_ELEMS_DEFAULT, _STEP_CALLS,
+                                   _fused_level_step,
+                                   _fused_level_step_batched, _leaf_totals,
+                                   _pad_leaves, make_plan)
+
+# Tuning knob read (late-bound) by level.plan: above this many row-state
+# elements (T·m_num·n) the batched level step switches from vmap to
+# lax.map over trees — see `level.plan._fused_level_step_batched`.
+_BATCH_VMAP_ELEMS = _BATCH_VMAP_ELEMS_DEFAULT
 
 
 # ---------------------------------------------------------------------------
@@ -139,487 +148,7 @@ class LevelStats:
 
 
 # ---------------------------------------------------------------------------
-# Jitted per-level pieces
-# ---------------------------------------------------------------------------
-
-def _pad_leaves(L: int, pad: int) -> int:
-    """Pad to a power of two (recompilation count is O(log leaves))."""
-    return max(pad, 1 << (L - 1).bit_length())
-
-
-@jax.jit
-def _gather_sorted_level(sorted_idx, leaf_of, w, stats):
-    """Per-column gathers of the level state in presorted order."""
-    return leaf_of[sorted_idx], w[sorted_idx], stats[sorted_idx]
-
-
-def _numeric_supersplits(backend, sorted_vals, sorted_idx, leaf_of, w, stats,
-                         cand, Lp, impurity, task, min_records):
-    """vmap the chosen exact backend over numerical columns.
-
-    sorted_vals/sorted_idx: (m_num, n); cand: (m_num, Lp+1).
-    Returns gains (m_num, Lp+1), thresholds (m_num, Lp+1).
-    """
-    fn = splits.NUMERIC_BACKENDS[backend]
-    def per_col(v, si, cl):
-        lf, ww, st = _gather_sorted_level(si, leaf_of, w, stats)
-        return fn(v, lf, ww, st, cl, Lp, impurity, task, min_records)
-    return jax.vmap(per_col)(sorted_vals, sorted_idx, cand)
-
-
-def _categorical_supersplits(cat_cols, leaf_of, w, stats, cand, Lp, max_arity,
-                             impurity, task, min_records):
-    """vmap exact categorical search over columns padded to max_arity."""
-    def per_col(x, cl):
-        return splits.best_categorical_split(
-            x, leaf_of, w, stats, cl, Lp, max_arity, impurity, task, min_records)
-    return jax.vmap(per_col)(cat_cols, cand)
-
-
-def _eval_conditions_core(num, cat, leaf_of, feat_of_leaf, thr_of_leaf,
-                          iscat_of_leaf, mask_of_leaf, m_num):
-    """Alg. 2 step 5: evaluate the winning condition of each sample's leaf.
-
-    Returns bits (n,) bool — True = LEFT.  In the distributed engine this is
-    the 1-bit-per-sample payload that gets allreduced (see distributed.py).
-    """
-    f = feat_of_leaf[leaf_of]                                   # (n,)
-    jn = jnp.clip(f, 0, max(m_num - 1, 0))
-    jc = jnp.clip(f - m_num, 0, max(cat.shape[1] - 1, 0))
-    xnum = jnp.take_along_axis(num, jn[:, None], axis=1)[:, 0] if num.size else jnp.zeros_like(leaf_of, jnp.float32)
-    xcat = jnp.take_along_axis(cat, jc[:, None], axis=1)[:, 0] if cat.size else jnp.zeros_like(leaf_of)
-    num_bit = xnum <= thr_of_leaf[leaf_of]
-    cat_bit = mask_of_leaf[leaf_of, xcat]
-    return jnp.where(iscat_of_leaf[leaf_of], cat_bit, num_bit)
-
-
-_evaluate_conditions = functools.partial(jax.jit, static_argnames=("m_num",))(
-    _eval_conditions_core)
-
-
-@functools.partial(jax.jit, static_argnames=("Lp",))
-def _leaf_totals(leaf_of, stats, w, Lp):
-    inbag = (w > 0) & (leaf_of > 0)
-    return jax.ops.segment_sum(jnp.where(inbag[:, None], stats, 0.0),
-                               leaf_of, num_segments=Lp + 1)
-
-
-@jax.jit
-def _reassign(leaf_of, bits, new_left, new_right):
-    """Alg. 2 step 6: map samples to child leaf ids (0 if child closed)."""
-    child = jnp.where(bits, new_left[leaf_of], new_right[leaf_of])
-    return jnp.where(leaf_of > 0, child, 0)
-
-
-# ---------------------------------------------------------------------------
-# The fused level step (one jitted device program per depth)
-# ---------------------------------------------------------------------------
-
-def _partition_leaf_order(ord_idx, lf_pos, bits, new_left, new_right,
-                          row_counts, key_counts):
-    """Advance the per-column (leaf, value)-sorted order to the next level.
-
-    Children occupy consecutive id ranges in parent order (left id <
-    right id, parents in id order, closed = 0), so the stable counting sort
-    by the NEW leaf id reduces to: closed rows to the front (stable), then
-    a stable left/right partition inside each parent's contiguous block —
-    O(n) work with ONE cumsum and ONE scatter per column, no sort.
-    Relative row order inside every child equals the parent's
-    (value-ascending), exactly what a stable sort would produce, so the
-    `segment` backend's summation order — and hence its float results —
-    are preserved bit-for-bit.
-
-    The block structure is column-independent (same leaf histogram in every
-    column), so everything except the row permutation itself — `lf_pos`,
-    the current `row_counts` (L+1,) and next-level `key_counts` (2L+1,)
-    histograms, block starts, target offsets — is computed once.  Only the
-    1-bit condition outcome `bits` (row-indexed) is gathered per column.
-
-    Accepts an optional LEADING TREE AXIS on every argument
-    (ord_idx (T, m, n), the rest (T, ...)): the batched level step calls it
-    this way, outside its tree-axis vmap, so the permutation lands in ONE
-    flat scatter over all T·m columns — XLA lowers a batched-operand
-    scatter (what vmap would produce) far slower than the same scatter on a
-    flattened index space (~2x on CPU, measured).  The per-tree call takes
-    the same flat-scatter path with T = 1.
-    """
-    batched = ord_idx.ndim == 3
-    if not batched:
-        ord_idx, lf_pos, bits = ord_idx[None], lf_pos[None], bits[None]
-        new_left, new_right = new_left[None], new_right[None]
-        row_counts, key_counts = row_counts[None], key_counts[None]
-    B, m, n = ord_idx.shape
-
-    def shared(lf_pos, new_left, new_right, row_counts, key_counts):
-        # parents either split wholly or close wholly, so a block is
-        # all-closed or all-left/right; closed rows keep their block order,
-        # preceded by the closed rows of earlier parents
-        parent_closed = new_left == 0                         # (Lp+1,)
-        closed_sizes = jnp.where(parent_closed, row_counts, 0)
-        closed_before = jnp.cumsum(closed_sizes) - closed_sizes
-        offs = jnp.cumsum(key_counts) - key_counts            # per new key
-        is_start = jnp.concatenate(
-            [jnp.ones((1,), bool), lf_pos[1:] != lf_pos[:-1]])
-        start_idx = jax.lax.cummax(jnp.where(is_start, jnp.arange(n), -1))
-        in_block = jnp.arange(n) - start_idx                  # rank in block
-        return (start_idx, in_block, parent_closed[lf_pos],
-                closed_before[lf_pos] + in_block,             # (n,) shared
-                offs[new_left[lf_pos]], offs[new_right[lf_pos]])
-
-    start_idx, in_block, closed_here, pos_closed, offs_l, offs_r = \
-        jax.vmap(shared)(lf_pos, new_left, new_right, row_counts, key_counts)
-
-    wl = jax.vmap(lambda b, oi: b[oi])(                       # went LEFT
-        bits, ord_idx.reshape(B, m * n)).reshape(B, m, n)
-    cl = jnp.cumsum(wl.astype(jnp.int32), axis=2) - wl
-    si = jnp.broadcast_to(start_idx[:, None, :], (B, m, n))
-    left_rank = cl - jnp.take_along_axis(cl, si, axis=2)
-    pos = jnp.where(
-        closed_here[:, None, :], pos_closed[:, None, :],
-        jnp.where(wl, offs_l[:, None, :] + left_rank,
-                  offs_r[:, None, :] + in_block[:, None, :] - left_rank))
-    if B * m * n < 2 ** 31:
-        base = (jnp.arange(B * m, dtype=jnp.int32) * n).reshape(B, m, 1)
-        out = jnp.zeros((B * m * n,), ord_idx.dtype).at[
-            (pos + base).reshape(-1)].set(ord_idx.reshape(-1),
-                                          unique_indices=True
-                                          ).reshape(B, m, n)
-    else:
-        # the flat index space would overflow int32 (x64 is off); fall back
-        # to per-column scatters, whose indices stay < n
-        out = jax.vmap(jax.vmap(
-            lambda p, o: jnp.zeros_like(o).at[p].set(
-                o, unique_indices=True)))(pos, ord_idx)
-    return out if batched else out[0]
-
-
-_LEVEL_STATICS = (
-    "Lp", "m_num", "m_cat", "max_arity", "num_classes", "m_prime", "usb",
-    "impurity", "task", "min_records", "backend", "split_mode", "num_bins",
-    "use_ord", "need_partition", "supersplit_fn")
-
-# Dispatch/trace counters: tests assert the batched builder issues ONE
-# jitted level program per depth per tree-batch (and never falls back to
-# per-tree dispatches).  CALLS bump at dispatch time, TRACES at trace time.
-_STEP_CALLS = [0]          # per-tree fused level dispatches (build_tree)
-_BATCH_STEP_CALLS = [0]    # batched level dispatches (build_forest)
-_BATCH_STEP_TRACES = [0]   # distinct compilations of the batched program
-
-# Above this many row-state elements (T·m_num·n) the batched level step
-# switches from vmap (SIMD across trees) to lax.map (sequential trees, one
-# program) — the vmapped stack stops being cache-resident and measures
-# ~1.5x slower on CPU; see `_fused_level_step_batched`.
-_BATCH_VMAP_ELEMS = 1 << 19
-
-
-def _level_step_core(num, cat, labels, sorted_vals, sorted_idx, bin_of,
-                     bin_edges, ord_idx, leaf_of, w, stats, splittable_p,
-                     totals, row_counts, fkey, depth, *, Lp, m_num, m_cat,
-                     max_arity, num_classes, m_prime, usb, impurity, task,
-                     min_records, backend, split_mode, num_bins, use_ord,
-                     need_partition, supersplit_fn, fused_tail=True):
-    """One whole depth level of Alg. 2 as a single device program.
-
-    Steps 3-7 fused: candidate feature draw, numeric + categorical
-    supersplit search, partial-supersplit merge (cross-feature argmax),
-    condition evaluation, leaf reassignment, and the next level's leaf
-    totals.  Only the returned per-leaf struct (winning feature, gain,
-    threshold, category mask, split bitmap) is fetched by the host; the
-    row-indexed state (`leaf_of`, the per-column leaf order) stays
-    device-resident.
-
-    `split_mode` (static) selects the numeric search: "exact" runs the
-    paper's midpoint-exhaustive engines over the presorted order; "hist"
-    (the PLANET-style baseline, DESIGN.md §6) scores only the `num_bins`
-    bucket boundaries from per-leaf (bin × stat) count tables built by the
-    categorical scatter-add machinery (`bin_of`/`bin_edges` replace
-    `sorted_vals`/`sorted_idx` — no presorted state in the hot path).
-
-    `supersplit_fn` (static) replaces the local numeric search with the
-    shard_map'd distributed one — it composes under this jit, so the same
-    fused program runs on the mesh (distributed.py).  In hist mode its
-    signature takes (bin_of, bin_edges, ...) instead of the sorted order
-    (distributed.make_hist_sharded_supersplit).
-    """
-    L1 = Lp + 1
-    m = m_num + m_cat
-    n = leaf_of.shape[0]
-
-    # Alg. 2 step 3: seeded per-leaf candidate features (paper §2.2/§2.4)
-    cand = bagging.candidate_features(fkey, depth, Lp, m, m_prime, usb)
-    cand = cand & splittable_p[1:, None]
-    cand_p = jnp.concatenate([jnp.zeros((1, m), bool), cand], 0)  # leaf 0
-
-    gains_parts, masks = [], None
-    thr_num = jnp.zeros((max(m_num, 1), L1), jnp.float32)
-    if m_num and split_mode == "hist":
-        cnum = cand_p[:, :m_num].T
-        if supersplit_fn is not None:
-            g, t = supersplit_fn(bin_of, bin_edges, leaf_of, w, stats,
-                                 cnum, Lp, impurity, task, min_records)
-        else:
-            if backend == "kernel":
-                from repro.kernels import ops as kops
-                tables = kops.categorical_tables(
-                    bin_of, leaf_of, w, labels, V=num_bins, Lp=Lp, task=task,
-                    num_classes=num_classes)
-            else:
-                tables = jax.vmap(
-                    lambda b: splits.categorical_count_table(
-                        b, leaf_of, w, stats, Lp, num_bins))(bin_of)
-            g, t = jax.vmap(
-                lambda tb, e, c: splits.best_numeric_split_histogram(
-                    tb, e, c, impurity, task, min_records))(
-                tables, bin_edges, cnum)
-        gains_parts.append(g)
-        thr_num = t
-    elif m_num:
-        cnum = cand_p[:, :m_num].T
-        if supersplit_fn is not None:
-            g, t = supersplit_fn(sorted_vals, sorted_idx, leaf_of, w, stats,
-                                 cnum, Lp, impurity, task, min_records)
-        elif backend == "kernel":
-            from repro.kernels import ops as kops
-            g, t = kops.split_scan_supersplit(
-                sorted_vals, sorted_idx, leaf_of, w, labels, cnum, Lp,
-                impurity, task, min_records, num_classes=num_classes)
-        elif use_ord:
-            # leaf-ordered fast path: no per-level counting sort.  Shared
-            # per-leaf totals are exact for classification (integer bag
-            # counts); regression reduces per column to keep the reference
-            # builder's float summation order bit-for-bit.
-            tot = totals if task == "classification" else None
-            lf_pos = leaf_of[ord_idx[0]]            # same for every column
-            inbag = (w > 0)[ord_idx] & (lf_pos > 0)[None]
-            ord_vals = jnp.take_along_axis(num.T, ord_idx, axis=1)
-            g, t = splits.best_numeric_split_leaf_ordered(
-                ord_vals, lf_pos, inbag, stats[ord_idx],
-                cnum, Lp, impurity, task, min_records, totals=tot,
-                row_counts=row_counts)
-        else:
-            g, t = _numeric_supersplits(
-                backend, sorted_vals, sorted_idx, leaf_of, w, stats,
-                cnum, Lp, impurity, task, min_records)
-        gains_parts.append(g)
-        thr_num = t
-    if m_cat:
-        ccat = cand_p[:, m_num:].T
-        if backend == "kernel":
-            from repro.kernels import ops as kops
-            tables = kops.categorical_tables(
-                cat.T, leaf_of, w, labels, V=max_arity, Lp=Lp, task=task,
-                num_classes=num_classes)
-            g, masks = jax.vmap(
-                lambda tb, c: splits.best_categorical_split_from_table(
-                    tb, c, impurity, task, min_records))(tables, ccat)
-        else:
-            g, masks = _categorical_supersplits(
-                cat.T, leaf_of, w, stats, ccat, Lp, max_arity, impurity,
-                task, min_records)
-        gains_parts.append(g)
-
-    all_gains = jnp.concatenate(gains_parts, axis=0)            # (m, L1)
-
-    # tree builder merges partial supersplits (Alg. 2 step 3, final argmax)
-    best_feat = jnp.argmax(all_gains, axis=0).astype(jnp.int32)  # (L1,)
-    best_gain = jnp.take_along_axis(all_gains, best_feat[None], 0)[0]
-    will_split = splittable_p & jnp.isfinite(best_gain) & (best_gain > 1e-9)
-
-    # children get consecutive 1-based ids in leaf order (Alg. 2 step 6)
-    ks = jnp.cumsum(will_split.astype(jnp.int32))
-    new_left = jnp.where(will_split, 2 * ks - 1, 0).astype(jnp.int32)
-    new_right = jnp.where(will_split, 2 * ks, 0).astype(jnp.int32)
-
-    feat_of_leaf = jnp.where(will_split, best_feat, 0).astype(jnp.int32)
-    iscat_of_leaf = will_split & (best_feat >= m_num) if m_cat else \
-        jnp.zeros((L1,), bool)
-    thr_sel = jnp.take_along_axis(
-        thr_num, jnp.clip(best_feat, 0, max(m_num - 1, 0))[None], 0)[0]
-    thr_of_leaf = jnp.where(will_split & ~iscat_of_leaf, thr_sel, 0.0)
-    if m_cat:
-        jc = jnp.clip(best_feat - m_num, 0, m_cat - 1)
-        mask_sel = masks[jc, jnp.arange(L1)]                    # (L1, V)
-        mask_of_leaf = jnp.where(iscat_of_leaf[:, None], mask_sel, False)
-    else:
-        mask_of_leaf = jnp.zeros((L1, max_arity), bool)
-
-    # Alg. 2 steps 5-6: 1-bit condition per sample, reassign to children
-    bits = _eval_conditions_core(num, cat, leaf_of, feat_of_leaf,
-                                 thr_of_leaf, iscat_of_leaf, mask_of_leaf,
-                                 m_num)
-    new_leaf_of = jnp.where(
-        leaf_of > 0,
-        jnp.where(bits, new_left[leaf_of], new_right[leaf_of]), 0)
-
-    struct = {"best_feat": best_feat, "best_gain": best_gain,
-              "thr": thr_of_leaf, "mask": mask_of_leaf,
-              "will_split": will_split}
-    if not fused_tail:
-        # batched mode: the scatter-backed reductions (next totals, key
-        # counts, order partition) run OUTSIDE the tree-axis vmap, on a
-        # flattened (tree, segment) index space — vmap would lower them as
-        # batched-operand scatters, ~2x slower on CPU.  Hand back the
-        # per-tree pieces the wrapper needs.
-        part = (bits, new_left, new_right) if use_ord else None
-        return struct, new_leaf_of, ord_idx, None, part
-
-    # next-level totals (node values / counts / splittable for depth+1)
-    inb = (w > 0) & (new_leaf_of > 0)
-    next_totals = jax.ops.segment_sum(jnp.where(inb[:, None], stats, 0.0),
-                                      new_leaf_of, num_segments=2 * Lp + 1)
-
-    if use_ord:
-        key_counts = jax.ops.segment_sum(jnp.ones((n,), jnp.int32),
-                                         new_leaf_of, num_segments=2 * Lp + 1)
-        # becomes the next level's row_counts (host slices to the new Lp)
-        struct["key_counts"] = key_counts
-        if need_partition:
-            new_ord_idx = _partition_leaf_order(
-                ord_idx, lf_pos, bits, new_left, new_right, row_counts,
-                key_counts)
-        else:       # the next level cannot split again (max depth reached)
-            new_ord_idx = ord_idx
-    else:
-        new_ord_idx = ord_idx
-    return struct, new_leaf_of, new_ord_idx, next_totals, None
-
-
-@functools.partial(jax.jit, static_argnames=_LEVEL_STATICS)
-def _fused_level_step(num, cat, labels, sorted_vals, sorted_idx, bin_of,
-                      bin_edges, ord_idx, leaf_of, w, stats, splittable_p,
-                      totals, row_counts, fkey, depth, *, Lp, m_num, m_cat,
-                      max_arity, num_classes, m_prime, usb, impurity, task,
-                      min_records, backend, split_mode, num_bins, use_ord,
-                      need_partition, supersplit_fn):
-    """The per-tree fused level step (see `_level_step_core`)."""
-    struct, new_leaf_of, new_ord_idx, next_totals, _ = _level_step_core(
-        num, cat, labels, sorted_vals, sorted_idx, bin_of, bin_edges,
-        ord_idx, leaf_of, w, stats, splittable_p, totals, row_counts, fkey,
-        depth, Lp=Lp, m_num=m_num, m_cat=m_cat, max_arity=max_arity,
-        num_classes=num_classes, m_prime=m_prime, usb=usb, impurity=impurity,
-        task=task, min_records=min_records, backend=backend,
-        split_mode=split_mode, num_bins=num_bins, use_ord=use_ord,
-        need_partition=need_partition, supersplit_fn=supersplit_fn)
-    return struct, new_leaf_of, new_ord_idx, next_totals
-
-
-@functools.partial(jax.jit, static_argnames=_LEVEL_STATICS)
-def _fused_level_step_batched(num, cat, labels, sorted_vals, sorted_idx,
-                              bin_of, bin_edges, ord_idx, leaf_of, w, stats,
-                              splittable_p, totals, row_counts, fkeys, depth,
-                              *, Lp, m_num, m_cat, max_arity, num_classes,
-                              m_prime, usb, impurity, task, min_records,
-                              backend, split_mode, num_bins, use_ord,
-                              need_partition, supersplit_fn):
-    """One depth level of EVERY tree in a batch as a single device program.
-
-    Trees are independent, so the whole fused level step — candidate draw,
-    numeric + categorical supersplit, winner argmax, condition evaluation,
-    leaf reassignment, next-level totals, incremental leaf-order partition —
-    is `vmap`ped over a leading tree axis T.  Shared read-only inputs (the
-    raw columns, labels, the forest-wide presorted order) broadcast; the
-    per-tree state batches:
-
-        num (n, m_num), cat (n, m_cat), labels (n,),
-        sorted_vals/sorted_idx (m_num, n)              [shared, in_axes=None]
-        ord_idx (T, m_num, n), leaf_of (T, n), w (T, n), stats (T, n, S),
-        splittable_p (T, Lp+1), totals (T, Lp+1, S), row_counts (T, Lp+1),
-        fkeys (T, key)                                 [batched, in_axes=0]
-
-    `Lp` is the batch-wide padded frontier width (max over the batch's
-    trees); trees with fewer open leaves — or none, having finished early —
-    are masked through `splittable_p`, which zeroes their candidate sets so
-    every gain is −inf and `will_split` stays False.  Because
-    `bagging.candidate_features` is padding-independent (per-leaf fold-in),
-    batching under the shared `Lp` is bit-identical per tree to the
-    per-tree `_fused_level_step` under that tree's own padding — the
-    property tests/test_forest_batch.py asserts against the reference
-    builder.  The Pallas paths (`split_scan`, `cat_hist`) batch through
-    `pallas_call`'s vmap rule, which folds the tree axis into the kernel
-    grid — still one device program.
-
-    Two lowering strategies, chosen statically by batch working-set size:
-
-      * SIMD across trees (`vmap` of the core, scatters flattened over the
-        (tree, segment) index space) when the batch's row state is
-        cache-resident — the fast path at small n, where dispatch overhead
-        dominates and cross-tree vectorization is free;
-      * sequential trees (`lax.map` of the per-tree core) when the stacked
-        state would thrash cache (measured ~1.5x slower under vmap on CPU
-        at T=16, n=100k) — still ONE device program per level, so the
-        T·D → D dispatch/host-sync amortization is kept at every size.
-
-    Returns the per-tree struct dict and next-level state, all with the
-    leading T axis; the host fetches the structs in ONE transfer per level.
-    """
-    _BATCH_STEP_TRACES[0] += 1
-    T, n = leaf_of.shape
-    if T * max(m_num, 1) * n > _BATCH_VMAP_ELEMS:
-        # cache-bound regime: run the trees sequentially INSIDE the program
-        core = functools.partial(
-            _level_step_core, Lp=Lp, m_num=m_num, m_cat=m_cat,
-            max_arity=max_arity, num_classes=num_classes, m_prime=m_prime,
-            usb=usb, impurity=impurity, task=task, min_records=min_records,
-            backend=backend, split_mode=split_mode, num_bins=num_bins,
-            use_ord=use_ord, need_partition=need_partition,
-            supersplit_fn=supersplit_fn, fused_tail=True)
-
-        def body(args):
-            ord_t, leaf_t, w_t, stats_t, sp_t, tot_t, rc_t, fk_t = args
-            s, nl, no, nt, _ = core(num, cat, labels, sorted_vals,
-                                    sorted_idx, bin_of, bin_edges, ord_t,
-                                    leaf_t, w_t, stats_t, sp_t, tot_t, rc_t,
-                                    fk_t, depth)
-            return s, nl, no, nt
-
-        return jax.lax.map(body, (ord_idx, leaf_of, w, stats, splittable_p,
-                                  totals, row_counts, fkeys))
-
-    core = functools.partial(
-        _level_step_core, Lp=Lp, m_num=m_num, m_cat=m_cat,
-        max_arity=max_arity, num_classes=num_classes, m_prime=m_prime,
-        usb=usb, impurity=impurity, task=task, min_records=min_records,
-        backend=backend, split_mode=split_mode, num_bins=num_bins,
-        use_ord=use_ord, need_partition=need_partition,
-        supersplit_fn=supersplit_fn, fused_tail=False)
-    struct, new_leaf_of, _, _, part = jax.vmap(
-        core, in_axes=(None, None, None, None, None, None, None,
-                       0, 0, 0, 0, 0, 0, 0, 0, None))(
-        num, cat, labels, sorted_vals, sorted_idx, bin_of, bin_edges,
-        ord_idx, leaf_of, w, stats, splittable_p, totals, row_counts, fkeys,
-        depth)
-
-    # scatter-backed tail on the FLAT (tree, segment) index space: per-tree
-    # results are bit-identical (each tree's rows accumulate in the same
-    # order as in the per-tree program) but the scatters lower ~2x faster
-    # than their vmapped form on CPU
-    L2 = 2 * Lp + 1
-    flat_ids = (new_leaf_of
-                + jnp.arange(T, dtype=jnp.int32)[:, None] * L2).reshape(-1)
-    inb = (w > 0) & (new_leaf_of > 0)
-    next_totals = jax.ops.segment_sum(
-        jnp.where(inb.reshape(-1)[:, None], stats.reshape(T * n, -1), 0.0),
-        flat_ids, num_segments=T * L2).reshape(T, L2, -1)
-    if use_ord:
-        key_counts = jax.ops.segment_sum(
-            jnp.ones((T * n,), jnp.int32), flat_ids,
-            num_segments=T * L2).reshape(T, L2)
-        struct = dict(struct, key_counts=key_counts)
-        if need_partition:
-            bits, new_left, new_right = part
-            lf_pos = jax.vmap(lambda lf, oi: lf[oi])(leaf_of, ord_idx[:, 0])
-            new_ord_idx = _partition_leaf_order(
-                ord_idx, lf_pos, bits, new_left, new_right, row_counts,
-                key_counts)
-        else:
-            new_ord_idx = ord_idx
-    else:
-        new_ord_idx = ord_idx
-    return struct, new_leaf_of, new_ord_idx, next_totals
-
-
-# ---------------------------------------------------------------------------
-# The tree builder (Alg. 2)
+# Setup helpers shared by the drivers
 # ---------------------------------------------------------------------------
 
 def _tree_setup(sorted_vals, arities, labels, params):
@@ -652,6 +181,42 @@ def _hist_state(num, sorted_vals, params, m_num, bin_of, bin_edges):
         return bin_of, bin_edges
     return jnp.zeros((0, 0), jnp.int32), jnp.zeros((0, 0), jnp.float32)
 
+
+def _resolve_engines(params, supersplit_fn, engine, cat_engine):
+    """Back-compat: a bare `supersplit_fn` closure wraps into a LegacyFn
+    engine; a SplitEngine passed as `supersplit_fn` IS the engine."""
+    if supersplit_fn is not None:
+        if engine is not None:
+            raise ValueError(
+                "pass either engine= (a SplitEngine) or supersplit_fn=, "
+                "not both — one of them would be silently ignored")
+        if isinstance(supersplit_fn, SplitEngine):
+            engine = supersplit_fn
+        else:
+            engine = LegacyFn(fn=supersplit_fn,
+                              hist=params.split_mode == "hist")
+    return engine, cat_engine
+
+
+def _make_plan(params, *, sorted_vals, arities, labels, num_classes,
+               supersplit_fn=None, engine=None, cat_engine=None):
+    n, m_num, m_cat, m, max_arity, m_prime = _tree_setup(
+        sorted_vals, arities, labels, params)
+    engine, cat_engine = _resolve_engines(params, supersplit_fn, engine,
+                                          cat_engine)
+    plan = make_plan(params, m_num=m_num, m_cat=m_cat, max_arity=max_arity,
+                     num_classes=num_classes, m_prime=m_prime,
+                     engine=engine, cat_engine=cat_engine)
+    return plan, (n, m_num, m_cat, m, max_arity, m_prime)
+
+
+def _zeros_unless(cond, arr, dtype):
+    return arr if cond else jnp.zeros((0, 0), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Host-side flat-tree bookkeeping (Alg. 2 step 8)
+# ---------------------------------------------------------------------------
 
 class _NodeAccum:
     """Host-side flat-tree accumulator (Alg. 2 step 8 bookkeeping).
@@ -728,6 +293,29 @@ def _grow_level(acc: _NodeAccum, open_nodes: list, host: dict, L: int,
     return next_open, any_split
 
 
+def _assemble_tree(acc: _NodeAccum, max_arity, m_num, task) -> Tree:
+    N = len(acc.feature)
+    cat_mask_arr = np.zeros((N, max_arity), bool)
+    for i, cm in enumerate(acc.cat_mask):
+        if cm is not None:
+            cat_mask_arr[i, :len(cm)] = cm
+    return Tree(
+        feature=np.asarray(acc.feature, np.int32),
+        threshold=np.asarray(acc.threshold, np.float32),
+        is_cat=np.asarray(acc.is_cat, bool),
+        cat_mask=cat_mask_arr,
+        children=np.asarray(acc.children, np.int32),
+        value=np.stack(acc.value).astype(np.float32),
+        n_node=np.asarray(acc.n_node, np.float32),
+        gain=np.asarray(acc.gain, np.float32),
+        depth=np.asarray(acc.depth, np.int32),
+        m_num=m_num, task=task)
+
+
+# ---------------------------------------------------------------------------
+# The per-tree driver (Alg. 2)
+# ---------------------------------------------------------------------------
+
 def build_tree(
     *,
     num: jnp.ndarray, cat: jnp.ndarray, labels: jnp.ndarray,
@@ -738,6 +326,8 @@ def build_tree(
     supersplit_fn=None,
     bin_of: Optional[jnp.ndarray] = None,
     bin_edges: Optional[jnp.ndarray] = None,
+    engine: Optional[SplitEngine] = None,
+    cat_engine: Optional[SplitEngine] = None,
 ) -> tuple[Tree, list[LevelStats]]:
     """Train ONE tree with one fused jitted device program per depth level.
 
@@ -760,12 +350,12 @@ def build_tree(
                      off-TPU).
       seed/tree_idx: seeded bagging + candidate draws (paper §2.2) — all
                      randomness is a pure function of these two.
-      supersplit_fn: optional replacement for the local numeric supersplit
-                     (distributed.py passes the shard_map'd search; it
-                     composes inside the fused jit so the same program
-                     lowers for the mesh).  Under `split_mode="hist"` the
-                     expected signature is the histogram one
-                     (make_hist_sharded_supersplit).
+      engine/cat_engine: explicit `level.SplitEngine` overrides (e.g. the
+                     mesh engines of `level.sharded`); default resolves
+                     the local engine for `params.split_mode`/`backend`.
+      supersplit_fn: back-compat — a SplitEngine here is used as `engine`;
+                     a bare closure (the pre-engine API) wraps into
+                     `level.LegacyFn` and runs per-tree, unbatched.
       bin_of/bin_edges: hist-mode bucket state ((m_num, n) int32 bucket ids
                      and (m_num, num_bins) f32 upper edges) as produced by
                      `TabularDataset.quantize`; derived here from
@@ -775,14 +365,16 @@ def build_tree(
     tests/test_fused_level.py) while the host does bookkeeping only: per
     level it uploads the tiny (splittable, totals) pair and fetches one
     small per-leaf struct; all row-indexed state stays on device.  To train
-    many trees, prefer `build_forest`, which runs this same level step
-    vmapped over a whole tree batch.
+    many trees, prefer `build_forest`, which runs this same level plan over
+    a whole tree batch.
 
     Returns (Tree, [LevelStats]) — the flat host-side tree and, when
     `collect_stats`, the per-level paper-Table-1 counters.
     """
-    n, m_num, m_cat, m, max_arity, m_prime = _tree_setup(
-        sorted_vals, arities, labels, params)
+    plan, (n, m_num, m_cat, m, max_arity, m_prime) = _make_plan(
+        params, sorted_vals=sorted_vals, arities=arities, labels=labels,
+        num_classes=num_classes, supersplit_fn=supersplit_fn, engine=engine,
+        cat_engine=cat_engine)
     task = params.task
     hist = params.split_mode == "hist"
     bin_of, bin_edges = _hist_state(num, sorted_vals, params, m_num,
@@ -801,11 +393,10 @@ def build_tree(
     leaf_of = jnp.ones((n,), jnp.int32)       # all samples at the root
     stats_log: list[LevelStats] = []
 
-    # the segment backend's leaf-ordered state; other backends read the
-    # plain presorted layout and get zero-size dummies for the other one
-    # (hist mode reads neither: bucket tables are scatter-adds in row order)
-    use_ord = (params.backend == "segment" and supersplit_fn is None
-               and m_num > 0 and not hist)
+    # the segment engine's leaf-ordered state; other engines read the
+    # plain presorted layout (or the bucket state) and get zero-size
+    # dummies for the layouts they don't use
+    use_ord = plan.use_ord
     # root: all rows in leaf 1, so value order == (leaf, value) order
     ord_idx = sorted_idx if use_ord else jnp.zeros((0, 0), jnp.int32)
 
@@ -845,22 +436,19 @@ def build_tree(
 
         # the whole level on device: one dispatch, one small struct back
         _STEP_CALLS[0] += 1
-        skip_sorted = use_ord or hist      # neither layout reads the presort
         struct, leaf_of, ord_idx, next_totals = _fused_level_step(
             num, cat, labels,
-            jnp.zeros((0, 0), jnp.float32) if skip_sorted else sorted_vals,
-            jnp.zeros((0, 0), jnp.int32) if skip_sorted else sorted_idx,
+            _zeros_unless(plan.pass_sorted, sorted_vals, jnp.float32),
+            _zeros_unless(plan.pass_sorted, sorted_idx, jnp.int32),
             bin_of, bin_edges, ord_idx, leaf_of, w, stats,
             jnp.asarray(splittable_p), jnp.asarray(totals_np),
             jnp.asarray(row_counts_np), fkey,
-            jnp.int32(depth), Lp=Lp, m_num=m_num, m_cat=m_cat,
-            max_arity=max_arity, num_classes=num_classes, m_prime=m_prime,
-            usb=params.usb, impurity=params.impurity, task=task,
-            min_records=params.min_records, backend=params.backend,
-            split_mode=params.split_mode, num_bins=params.num_bins,
-            use_ord=use_ord,
-            need_partition=use_ord and depth + 1 < params.max_depth,
-            supersplit_fn=supersplit_fn)
+            jnp.int32(depth), plan=plan, Lp=Lp,
+            need_partition=use_ord and depth + 1 < params.max_depth)
+        # non-blocking D2H of the small per-level struct
+        for leaf in jax.tree_util.tree_leaves((struct, next_totals)):
+            if hasattr(leaf, "copy_to_host_async"):
+                leaf.copy_to_host_async()
         host, totals_np = jax.device_get((struct, next_totals))
         if use_ord:
             row_counts_np = host["key_counts"]
@@ -884,13 +472,10 @@ def build_tree(
         open_nodes = next_open
 
         # Sprint-style pruning switch (paper §3): compact rows in closed
-        # leaves once they dominate.  Device-resident: under the
-        # leaf-ordered layout the closed rows are the CONTIGUOUS PREFIX of
-        # every column's order (new leaf id 0 sorts first), so compaction is
-        # a per-column slice + index remap — no host pass, no per-column
-        # numpy loop.  The closed count itself is already on the host
-        # (row_counts[0] from the level struct), so the trigger costs zero
-        # extra transfers.
+        # leaves once they dominate (core/pruning.py).  Device-resident:
+        # no host pass, no per-column numpy loop; under the leaf-ordered
+        # layout the closed count is already on the host (row_counts[0]
+        # from the level struct), so the trigger costs zero transfers.
         if params.prune_closed_frac < 1.0 and n > 0:
             # the ord layout is only current when this level partitioned it
             # (the last level before max_depth skips the partition; the loop
@@ -898,48 +483,26 @@ def build_tree(
             order_current = not use_ord or (depth + 1 < params.max_depth)
             closed = (int(row_counts_np[0]) if use_ord
                       else int(jnp.sum(leaf_of == 0)))
-            if closed / n >= params.prune_closed_frac and 0 < closed < n \
-                    and order_current:
-                n_new = n - closed
-                keep = leaf_of > 0
-                remap = jnp.cumsum(keep.astype(jnp.int32)) - 1
-                keep_idx = jnp.nonzero(keep, size=n_new)[0]
+            drop = pruning.plan_drop(n, closed, plan.row_shards,
+                                     params.prune_closed_frac)
+            if drop and order_current:
+                (n, leaf_of, ord_idx, sorted_vals, sorted_idx, bin_of, num,
+                 cat, stats, w, labels) = pruning.compact_rows(
+                    keep=pruning.keep_mask(leaf_of == 0, drop), drop=drop,
+                    leaf_of=leaf_of, ord_idx=ord_idx,
+                    sorted_vals=sorted_vals, sorted_idx=sorted_idx,
+                    bin_of=bin_of, num=num, cat=cat, stats=stats, w=w,
+                    labels=labels, use_ord=use_ord, hist=hist, m_num=m_num)
                 if use_ord:
-                    # closed rows = positions [0, closed) in EVERY column
-                    ord_idx = jnp.take(remap, ord_idx[:, closed:])
                     row_counts_np = row_counts_np.copy()
-                    row_counts_np[0] = 0      # the dropped (closed) rows
-                elif hist:
-                    # bucket ids are row-indexed; no sorted state to filter
-                    if m_num:
-                        bin_of = bin_of[:, keep_idx]
-                elif m_num:
-                    # filter the presorted order (stability preserves it):
-                    # every column keeps the same n_new rows, so the flat
-                    # row-major nonzero is (m_num, n_new) column blocks
-                    kept_cols = jnp.take(keep, sorted_idx)
-                    flat = jnp.nonzero(kept_cols.reshape(-1),
-                                       size=m_num * n_new)[0]
-                    sorted_idx = jnp.take(
-                        remap, sorted_idx.reshape(-1)[flat]
-                    ).reshape(m_num, n_new)
-                    sorted_vals = sorted_vals.reshape(-1)[flat].reshape(
-                        m_num, n_new)
-                num = num[keep_idx]
-                cat = cat[keep_idx]
-                stats = stats[keep_idx]
-                w = w[keep_idx]
-                labels = labels[keep_idx]
-                leaf_of = leaf_of[keep_idx]
-                n = n_new
+                    row_counts_np[0] -= drop   # dropped rows were leaf 0
 
     return _assemble_tree(acc, max_arity, m_num, task), stats_log
 
 
 # ---------------------------------------------------------------------------
-# The batched forest builder (vmap over tree state — ROADMAP
-# "multi-tree level batching": the manager's parallel tree-builder queries
-# answered by ONE device, DESIGN.md §3)
+# The batched forest driver (vmap over tree state — DESIGN.md §3; the
+# manager's parallel tree-builder queries answered by ONE device program)
 # ---------------------------------------------------------------------------
 
 def build_forest(
@@ -951,6 +514,8 @@ def build_forest(
     collect_stats: bool = False,
     bin_of: Optional[jnp.ndarray] = None,
     bin_edges: Optional[jnp.ndarray] = None,
+    engine: Optional[SplitEngine] = None,
+    cat_engine: Optional[SplitEngine] = None,
 ) -> tuple[list[Tree], list[list[LevelStats]]]:
     """Train a BATCH of trees with one fused jitted program per depth level.
 
@@ -960,25 +525,40 @@ def build_forest(
     `Lp`, with trees that finish early masked via all-False `splittable`
     rows.  For T trees of depth D this issues D device programs total where
     the per-tree builder issues T·D — the dispatch/host-sync amortization
-    that fills the machine at small-to-medium n.
+    that fills the machine at small-to-medium n.  Mesh engines
+    (`level.sharded`) are batch-native: their shard_map'd search runs once
+    per level on the stacked tree state, so SHARDED training keeps the same
+    D-dispatch shape (see `level.plan._fused_level_step_batched`).
+
+    The host loop is PIPELINED: after dispatching level d the driver first
+    runs level d−1's deferred bookkeeping (`_grow_level`, node values) —
+    overlapping it with the device executing level d — and only then blocks
+    on level d's struct (whose D2H transfer was started eagerly with
+    `copy_to_host_async`).  Bookkeeping order per tree is unchanged, so
+    results are bit-identical to the unpipelined loop.
 
     Bit-parity: each returned tree is IDENTICAL to what
     `build_tree(..., tree_idx=t)` — and hence `build_tree_reference` —
-    produces for the same (seed, t), for every backend.  Two properties
-    carry this: `bagging.candidate_features` draws per leaf row (so the
-    batch-max padding does not perturb a tree's own draws), and the vmapped
-    level step performs the same per-tree reductions in the same order as
-    the unbatched one.  Asserted by tests/test_forest_batch.py.
+    produces for the same (seed, t), for every backend and engine.
+    Asserted by tests/test_forest_batch.py and tests/test_distributed.py.
 
     Args are as `build_tree`, except `tree_indices` (an iterable of tree
     ids, each seeding its own bagging/candidate streams) replaces
-    `tree_idx`, and `supersplit_fn`/`prune_closed_frac` are not supported —
-    `RandomForest.fit` routes those configurations to the per-tree builder.
+    `tree_idx`, and legacy `supersplit_fn` closures are not accepted
+    (pass a `level.SplitEngine` via `engine=` instead).  Sprint pruning
+    (`prune_closed_frac`) IS supported: rows closed in EVERY tree of the
+    batch are dropped (a result-invariant subset of each tree's closed
+    rows), keeping n divisible by any mesh engine's row-shard width.
 
     Returns (trees, stats_logs), parallel lists over `tree_indices`.
     """
-    n, m_num, m_cat, m, max_arity, m_prime = _tree_setup(
-        sorted_vals, arities, labels, params)
+    plan, (n, m_num, m_cat, m, max_arity, m_prime) = _make_plan(
+        params, sorted_vals=sorted_vals, arities=arities, labels=labels,
+        num_classes=num_classes, engine=engine, cat_engine=cat_engine)
+    if isinstance(plan.numeric, LegacyFn):
+        raise ValueError(
+            "legacy supersplit_fn closures are per-tree only; pass a "
+            "level.SplitEngine (engine=...) or use build_tree")
     task = params.task
     hist = params.split_mode == "hist"
     # the bucket state is tree-independent (quantized once per forest):
@@ -988,8 +568,6 @@ def build_forest(
     tidx = [int(t) for t in tree_indices]
     T = len(tidx)
     assert T >= 1
-    assert params.prune_closed_frac >= 1.0, \
-        "row pruning changes n per tree; use the per-tree builder"
 
     # per-tree stacked device state: bootstrap weights, stats, PRNG keys
     w = bagging.bag_counts_forest(seed, jnp.asarray(tidx, jnp.int32), n,
@@ -1005,20 +583,58 @@ def build_forest(
 
     accs = [_NodeAccum(num_classes, task) for _ in range(T)]
     open_nodes = [[a.new_node(0)] for a in accs]  # per tree: leaf h -> node
-    done = [False] * T                    # finished trees stay masked
     leaf_of = jnp.ones((T, n), jnp.int32)
     stats_logs: list[list[LevelStats]] = [[] for _ in range(T)]
 
-    use_ord = params.backend == "segment" and m_num > 0 and not hist
+    use_ord = plan.use_ord
     # every tree starts at the root, where value order == (leaf, value)
     # order, so the initial per-tree leaf order is the shared presort
     ord_idx = (jnp.broadcast_to(sorted_idx[None], (T,) + sorted_idx.shape)
                if use_ord else jnp.zeros((T, 0, 0), jnp.int32))
 
+    def write_values(Ls_d, counts_d, totals_d):
+        """Node values of one level from its (host) leaf totals."""
+        for t in range(T):
+            for h in range(1, Ls_d[t] + 1):
+                accs[t].set_value(open_nodes[t][h - 1], totals_d[t, h],
+                                  counts_d[t, h], task)
+
+    def make_book(depth_d, Ls_d, counts_d, totals_d, host_d, part_d, n_d):
+        """Level d's deferred host bookkeeping (runs after dispatching
+        level d+1; ordering per tree is exactly the unpipelined loop's)."""
+        def book():
+            write_values(Ls_d, counts_d, totals_d)
+            for t in range(T):
+                L = Ls_d[t]
+                if L == 0 or not part_d[t]:
+                    continue
+                host_t = {k: host_d[k][t] for k in
+                          ("best_feat", "best_gain", "thr", "mask",
+                           "will_split")}
+                next_open, any_split = _grow_level(
+                    accs[t], open_nodes[t], host_t, L, m_num, depth_d)
+                if collect_stats:
+                    # per-tree accounting under the tree's OWN padding, so
+                    # the counters match a per-tree build of the same tree
+                    Lp_t = _pad_leaves(L, params.leaf_pad)
+                    open_w = float(counts_d[t, 1:L + 1].sum())
+                    passes = int(min(m_prime * (1 if params.usb else L), m))
+                    stats_logs[t].append(LevelStats(
+                        depth=depth_d, open_leaves=L,
+                        network_bits_bitmap=int(open_w),
+                        network_bits_supersplit=int(m * (Lp_t + 1) * 64),
+                        class_list_bits=class_list.storage_bits(n_d, L),
+                        feature_passes=passes, rows_scanned=n_d * passes))
+                if any_split:
+                    open_nodes[t] = next_open
+        return book
+
     totals_np = None                      # (T, width, S), host
-    row_counts_np = None                  # (T, width), host (ord backend)
+    row_counts_np = None                  # (T, width), host (ord layout)
+    Ls = [1] * T                          # current frontier size per tree
+    closed_np = 0                         # rows closed in EVERY tree
+    pending = None                        # previous level's deferred book()
     for depth in range(params.max_depth + 1):
-        Ls = [0 if done[t] else len(open_nodes[t]) for t in range(T)]
         if max(Ls) == 0:
             break
         Lp = _pad_leaves(max(Ls), params.leaf_pad)  # batch-max frontier
@@ -1041,279 +657,98 @@ def build_forest(
             row_counts_np = cur_rc
         counts = cnt_np(totals_np)                # (T, Lp+1)
 
-        # per-tree node values + the splittable frontier mask
+        # the splittable frontier mask (per-tree node VALUES are written by
+        # the deferred bookkeeping — they are not needed for dispatch)
         at_max_depth = depth >= params.max_depth
         splittable_p = np.zeros((T, Lp + 1), bool)
-        for t in range(T):
-            if done[t]:
-                continue
-            for h, node in enumerate(open_nodes[t], start=1):
-                accs[t].set_value(node, totals_np[t, h], counts[t, h], task)
-            if at_max_depth:
-                done[t] = True                    # values written; no splits
-                continue
-            sp = counts[t, 1:Ls[t] + 1] >= 2 * params.min_records
-            if not sp.any():
-                done[t] = True
-                continue
-            splittable_p[t, 1:Ls[t] + 1] = sp
+        participate = [False] * T
+        if not at_max_depth:
+            for t in range(T):
+                if Ls[t] == 0:
+                    continue
+                sp = counts[t, 1:Ls[t] + 1] >= 2 * params.min_records
+                if sp.any():
+                    splittable_p[t, 1:Ls[t] + 1] = sp
+                    participate[t] = True
         if not splittable_p.any():
+            # nothing to dispatch: drain the pipeline, write the final
+            # frontier's node values, stop
+            if pending is not None:
+                pending()
+                pending = None
+            write_values(Ls, counts, totals_np)
+            Ls = [0] * T
             break
+
+        # Sprint pruning (paper §3), batched: drop rows closed in EVERY
+        # tree once they dominate (core/pruning.py).  Runs between levels
+        # (before dispatch), so the ord layout is always current here — the
+        # only level whose partition is skipped is the last one before
+        # max_depth, and that iteration breaks above instead of reaching
+        # this point.  The common-closed count rode home in the previous
+        # level's struct (`closed_rows`), so the trigger costs no extra
+        # dispatch or host sync and the pipelining stays intact.
+        if params.prune_closed_frac < 1.0 and n > 0:
+            drop = pruning.plan_drop(n, closed_np, plan.row_shards,
+                                     params.prune_closed_frac)
+            if drop:
+                keep_open = (leaf_of > 0).any(axis=0)      # (n,) device
+                (n, leaf_of, ord_idx, sorted_vals, sorted_idx, bin_of, num,
+                 cat, stats, w, labels) = pruning.compact_rows(
+                    keep=pruning.keep_mask(~keep_open, drop), drop=drop,
+                    leaf_of=leaf_of, ord_idx=ord_idx,
+                    sorted_vals=sorted_vals, sorted_idx=sorted_idx,
+                    bin_of=bin_of, num=num, cat=cat, stats=stats, w=w,
+                    labels=labels, use_ord=use_ord, hist=hist, m_num=m_num)
+                if use_ord:
+                    row_counts_np = row_counts_np.copy()
+                    row_counts_np[:, 0] -= drop  # dropped rows were leaf 0
+                closed_np -= drop
 
         # the whole level of the whole batch on device: ONE dispatch,
         # one stacked struct back
         _BATCH_STEP_CALLS[0] += 1
-        skip_sorted = use_ord or hist
         struct, leaf_of, ord_idx, next_totals = _fused_level_step_batched(
             num, cat, labels,
-            jnp.zeros((0, 0), jnp.float32) if skip_sorted else sorted_vals,
-            jnp.zeros((0, 0), jnp.int32) if skip_sorted else sorted_idx,
+            _zeros_unless(plan.pass_sorted, sorted_vals, jnp.float32),
+            _zeros_unless(plan.pass_sorted, sorted_idx, jnp.int32),
             bin_of, bin_edges, ord_idx, leaf_of, w, stats,
             jnp.asarray(splittable_p), jnp.asarray(totals_np),
             jnp.asarray(row_counts_np), fkeys,
-            jnp.int32(depth), Lp=Lp, m_num=m_num, m_cat=m_cat,
-            max_arity=max_arity, num_classes=num_classes, m_prime=m_prime,
-            usb=params.usb, impurity=params.impurity, task=task,
-            min_records=params.min_records, backend=params.backend,
-            split_mode=params.split_mode, num_bins=params.num_bins,
-            use_ord=use_ord,
-            need_partition=use_ord and depth + 1 < params.max_depth,
-            supersplit_fn=None)
+            jnp.int32(depth), plan=plan, Lp=Lp,
+            need_partition=use_ord and depth + 1 < params.max_depth)
+
+        # pipeline: start the D2H transfer, run the PREVIOUS level's host
+        # bookkeeping while the device executes this level, then block
+        for leaf in jax.tree_util.tree_leaves((struct, next_totals)):
+            if hasattr(leaf, "copy_to_host_async"):
+                leaf.copy_to_host_async()
+        if pending is not None:
+            pending()
+            pending = None
+
+        totals_cur = totals_np            # this level's totals, for values
         host, totals_np = jax.device_get((struct, next_totals))
         if use_ord:
             row_counts_np = host["key_counts"]
+        closed_np = int(host["closed_rows"])
 
-        # Alg. 2 step 8 per tree: grow the flat trees from the structs
+        # next frontier sizes need only the split bitmap — the rest of the
+        # bookkeeping is deferred to overlap the next dispatch
+        ws = host["will_split"]
+        Ls_next = [0] * T
         for t in range(T):
-            if done[t]:
-                continue
-            L = Ls[t]
-            host_t = {k: host[k][t] for k in ("best_feat", "best_gain",
-                                              "thr", "mask", "will_split")}
-            next_open, any_split = _grow_level(accs[t], open_nodes[t],
-                                               host_t, L, m_num, depth)
+            if participate[t]:
+                Ls_next[t] = 2 * int(ws[t, 1:Ls[t] + 1].sum())
+        pending = make_book(depth, list(Ls), counts, totals_cur, host,
+                            list(participate), n)
+        Ls = Ls_next
 
-            if collect_stats:
-                # per-tree accounting under the tree's OWN padding, so the
-                # counters match a per-tree build of the same tree
-                Lp_t = _pad_leaves(L, params.leaf_pad)
-                open_w = float(counts[t, 1:L + 1].sum())
-                passes = int(min(m_prime * (1 if params.usb else L), m))
-                stats_logs[t].append(LevelStats(
-                    depth=depth, open_leaves=L,
-                    network_bits_bitmap=int(open_w),
-                    network_bits_supersplit=int(m * (Lp_t + 1) * 64),
-                    class_list_bits=class_list.storage_bits(n, L),
-                    feature_passes=passes, rows_scanned=n * passes))
-
-            if any_split:
-                open_nodes[t] = next_open
-            else:
-                done[t] = True
+    if pending is not None:               # safety drain (loop always breaks
+        pending()                         # via the no-dispatch path above)
 
     return ([_assemble_tree(a, max_arity, m_num, task) for a in accs],
             stats_logs)
-
-
-# ---------------------------------------------------------------------------
-# The reference (pre-fusion) tree builder — executable specification
-# ---------------------------------------------------------------------------
-
-def build_tree_reference(
-    *,
-    num: jnp.ndarray, cat: jnp.ndarray, labels: jnp.ndarray,
-    sorted_vals: jnp.ndarray, sorted_idx: jnp.ndarray,
-    arities: tuple[int, ...], num_classes: int,
-    params: TreeParams, seed: int, tree_idx: int,
-    collect_stats: bool = False,
-    supersplit_fn=None,
-) -> tuple[Tree, list[LevelStats]]:
-    """The seed builder: one jitted call per level piece, numpy in between.
-
-    Kept as the executable specification of Alg. 2 — the fused `build_tree`
-    must reproduce its trees exactly (tests/test_fused_level.py), and
-    benchmarks/level_step_bench.py measures the fused speedup against it.
-    EXACT mode only: the histogram mode is an approximation with no
-    midpoint-exhaustive specification to match (its tests compare the
-    batched builder against the per-tree fused builder instead).
-    """
-    assert params.split_mode == "exact", \
-        "build_tree_reference is the exact-mode specification"
-    n, m_num, m_cat, m, max_arity, m_prime = _tree_setup(
-        sorted_vals, arities, labels, params)
-    task = params.task
-
-    w = bagging.bag_counts(seed, tree_idx, n, params.bagging)
-    stats = splits.row_stats(labels, w, num_classes, task)
-    cnt = splits.count_fn(task)
-    fkey = jax.random.fold_in(jax.random.PRNGKey(seed ^ 0x5EED), tree_idx)
-
-    acc = _NodeAccum(num_classes, task)
-    root = acc.new_node(0)
-    open_nodes = [root]                       # leaf id h (1-based) -> node id
-    leaf_of = jnp.ones((n,), jnp.int32)       # all samples at the root
-    stats_log: list[LevelStats] = []
-
-    for depth in range(params.max_depth + 1):
-        L = len(open_nodes)
-        if L == 0:
-            break
-        Lp = _pad_leaves(L, params.leaf_pad)
-
-        # leaf totals -> node values & forced closes
-        totals = np.asarray(_leaf_totals(leaf_of, stats, w, Lp))  # (Lp+1, S)
-        counts = np.asarray(cnt(jnp.asarray(totals)))
-        for h, node in enumerate(open_nodes, start=1):
-            acc.set_value(node, totals[h], counts[h], task)
-
-        at_max_depth = depth >= params.max_depth
-        splittable = np.array(
-            [counts[h] >= 2 * params.min_records and not at_max_depth
-             for h in range(1, L + 1)] + [False] * (Lp - L))
-        if not splittable.any():
-            break
-
-        # Alg. 2 step 3: query the splitters for the optimal supersplit
-        cand = bagging.candidate_features(fkey, depth, Lp, m, m_prime, params.usb)
-        cand = cand & jnp.asarray(splittable)[:, None]
-        cand_p = jnp.concatenate([jnp.zeros((1, m), bool), cand], 0)  # leaf 0 = closed
-
-        all_gains = np.full((m, Lp + 1), -np.inf, np.float32)
-        all_thr = np.zeros((m, Lp + 1), np.float32)
-        all_masks = None
-        if m_num:
-            if supersplit_fn is not None:
-                g, t = supersplit_fn(
-                    sorted_vals, sorted_idx, leaf_of, w, stats,
-                    cand_p[:, :m_num].T, Lp, params.impurity, task,
-                    params.min_records)
-            elif params.backend == "kernel":
-                from repro.kernels import ops as kops
-                g, t = kops.split_scan_supersplit(
-                    sorted_vals, sorted_idx, leaf_of, w, labels,
-                    cand_p[:, :m_num].T, Lp, params.impurity, task,
-                    params.min_records, num_classes=num_classes)
-            else:
-                g, t = _numeric_supersplits(
-                    params.backend, sorted_vals, sorted_idx, leaf_of, w, stats,
-                    cand_p[:, :m_num].T, Lp, params.impurity, task,
-                    params.min_records)
-            all_gains[:m_num], all_thr[:m_num] = np.asarray(g), np.asarray(t)
-        if m_cat:
-            g, masks = _categorical_supersplits(
-                cat.T, leaf_of, w, stats, cand_p[:, m_num:].T, Lp, max_arity,
-                params.impurity, task, params.min_records)
-            all_gains[m_num:] = np.asarray(g)
-            all_masks = np.asarray(masks)                    # (m_cat, Lp+1, V)
-
-        # tree builder merges partial supersplits (Alg. 2 step 3, final argmax)
-        best_feat = all_gains.argmax(axis=0)                 # (Lp+1,)
-        best_gain = all_gains[best_feat, np.arange(Lp + 1)]
-
-        # Alg. 2 step 8: close leaves with no good condition
-        feat_of_leaf = np.zeros(Lp + 1, np.int32)
-        thr_of_leaf = np.zeros(Lp + 1, np.float32)
-        iscat_of_leaf = np.zeros(Lp + 1, bool)
-        mask_of_leaf = np.zeros((Lp + 1, max_arity), bool)
-        new_left = np.zeros(Lp + 1, np.int32)
-        new_right = np.zeros(Lp + 1, np.int32)
-        next_open: list[int] = []
-        any_split = False
-        for h in range(1, L + 1):
-            node = open_nodes[h - 1]
-            if not splittable[h - 1] or not np.isfinite(best_gain[h]) or best_gain[h] <= 1e-9:
-                continue
-            j = int(best_feat[h])
-            any_split = True
-            acc.feature[node] = j
-            acc.gain[node] = float(best_gain[h])
-            feat_of_leaf[h] = j
-            if j < m_num:
-                acc.threshold[node] = float(all_thr[j, h])
-                thr_of_leaf[h] = all_thr[j, h]
-            else:
-                acc.is_cat[node] = True
-                iscat_of_leaf[h] = True
-                cm = all_masks[j - m_num, h]
-                acc.cat_mask[node] = cm.copy()
-                mask_of_leaf[h] = cm
-            lc, rc = acc.new_node(depth + 1), acc.new_node(depth + 1)
-            acc.children[node] = [lc, rc]
-            next_open.extend([lc, rc])
-            new_left[h] = len(next_open) - 1               # 1-based ids below
-            new_right[h] = len(next_open)
-
-        if collect_stats:
-            open_w = float(counts[1:L + 1].sum())
-            stats_log.append(LevelStats(
-                depth=depth, open_leaves=L,
-                network_bits_bitmap=int(open_w),
-                network_bits_supersplit=int(m * (Lp + 1) * 64),
-                class_list_bits=class_list.storage_bits(n, L),
-                feature_passes=int(min(m_prime * (1 if params.usb else L), m)),
-                rows_scanned=n * min(m_prime * (1 if params.usb else L), m)))
-
-        if not any_split:
-            break
-
-        # Alg. 2 steps 5-7: evaluate conditions (1 bit/sample) and reassign
-        bits = _evaluate_conditions(
-            num, cat, leaf_of, jnp.asarray(feat_of_leaf), jnp.asarray(thr_of_leaf),
-            jnp.asarray(iscat_of_leaf), jnp.asarray(mask_of_leaf), m_num)
-        leaf_of = _reassign(leaf_of, bits, jnp.asarray(new_left), jnp.asarray(new_right))
-        open_nodes = next_open
-
-        # Sprint-style pruning switch (paper §3): compact rows in closed
-        # leaves once they dominate.  The presorted order is FILTERED, not
-        # re-sorted (stability preserves it), so the one-time cost is one
-        # pass — the trade-off rule the paper describes.
-        if params.prune_closed_frac < 1.0 and n > 0:
-            lf_np = np.asarray(leaf_of)
-            keep = lf_np > 0
-            frac_closed = 1.0 - keep.mean()
-            if frac_closed >= params.prune_closed_frac and keep.any() \
-                    and keep.sum() < n:
-                remap = np.cumsum(keep) - 1
-                idx_np = np.asarray(sorted_idx)
-                vals_np = np.asarray(sorted_vals)
-                kept_cols = keep[idx_np]                      # (m_num, n)
-                n_new = int(keep.sum())
-                new_idx = np.empty((m_num, n_new), np.int32)
-                new_vals = np.empty((m_num, n_new), np.float32)
-                for j in range(m_num):
-                    sel = kept_cols[j]
-                    new_idx[j] = remap[idx_np[j][sel]]
-                    new_vals[j] = vals_np[j][sel]
-                sorted_idx = jnp.asarray(new_idx)
-                sorted_vals = jnp.asarray(new_vals)
-                num = num[jnp.asarray(keep)] if num.size else num
-                cat = cat[jnp.asarray(keep)] if cat.size else cat
-                stats = stats[jnp.asarray(keep)]
-                w = w[jnp.asarray(keep)]
-                labels = labels[jnp.asarray(keep)]
-                leaf_of = jnp.asarray(lf_np[keep])
-                n = n_new
-
-    return _assemble_tree(acc, max_arity, m_num, task), stats_log
-
-
-def _assemble_tree(acc: _NodeAccum, max_arity, m_num, task) -> Tree:
-    N = len(acc.feature)
-    cat_mask_arr = np.zeros((N, max_arity), bool)
-    for i, cm in enumerate(acc.cat_mask):
-        if cm is not None:
-            cat_mask_arr[i, :len(cm)] = cm
-    return Tree(
-        feature=np.asarray(acc.feature, np.int32),
-        threshold=np.asarray(acc.threshold, np.float32),
-        is_cat=np.asarray(acc.is_cat, bool),
-        cat_mask=cat_mask_arr,
-        children=np.asarray(acc.children, np.int32),
-        value=np.stack(acc.value).astype(np.float32),
-        n_node=np.asarray(acc.n_node, np.float32),
-        gain=np.asarray(acc.gain, np.float32),
-        depth=np.asarray(acc.depth, np.int32),
-        m_num=m_num, task=task)
 
 
 # ---------------------------------------------------------------------------
@@ -1342,3 +777,13 @@ def _predict_jit(feature, threshold, is_cat, cat_mask, children, value,
 
     node = jax.lax.fori_loop(0, iters, body, node)
     return value[node]
+
+
+def __getattr__(name):
+    # `build_tree_reference` lives in repro.core.reference (which imports
+    # this module); resolve it lazily to keep the historical
+    # `tree.build_tree_reference` entry point without an import cycle.
+    if name == "build_tree_reference":
+        from repro.core.reference import build_tree_reference
+        return build_tree_reference
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,39 @@
+"""Perf-regression gate (`-m slow`): re-run the smoke benchmarks and fail
+on >2× slowdown (or any level-program-count change) vs the committed
+``BENCH_smoke_baseline.json`` — see benchmarks/check_regression.py."""
+import os
+
+import pytest
+
+
+@pytest.mark.slow
+def test_smoke_benchmarks_within_regression_budget():
+    from benchmarks import check_regression
+
+    if not os.path.exists(check_regression.BASELINE_PATH):
+        pytest.skip("no committed smoke baseline on this checkout")
+    rc = check_regression.main([])
+    assert rc == 0, "perf regression vs BENCH_smoke_baseline.json " \
+                    "(details on stderr; refresh intentionally with " \
+                    "`python -m benchmarks.check_regression --update`)"
+
+
+def test_check_regression_logic():
+    """The comparison rules themselves (pure, fast): ratio gate on walls,
+    exact gate on program counters, missing metrics flagged."""
+    from benchmarks.check_regression import check
+
+    base = {"forest/batched_s/n4000": 1.0,
+            "programs::forest/batched/n4000": 6,
+            "hist/exact_s/n4000": 2.0}
+    ok = {"forest/batched_s/n4000": 1.9,
+          "programs::forest/batched/n4000": 6,
+          "hist/exact_s/n4000": 0.5}
+    assert check(ok, base, 2.0) == []
+    slow = dict(ok, **{"forest/batched_s/n4000": 2.5})
+    assert any("x2.50" in f for f in check(slow, base, 2.0))
+    drift = dict(ok, **{"programs::forest/batched/n4000": 12})
+    assert any("count changed" in f for f in check(drift, base, 2.0))
+    missing = {"programs::forest/batched/n4000": 6,
+               "hist/exact_s/n4000": 0.5}
+    assert any("disappeared" in f for f in check(missing, base, 2.0))

@@ -200,6 +200,60 @@ def test_device_resident_pruning_still_exact():
             np.testing.assert_allclose(ta.threshold, tb.threshold, atol=1e-4)
 
 
+def test_batched_pruning_stays_batched_and_exact():
+    """Sprint pruning no longer downgrades to the per-tree builder: the
+    batched driver drops rows closed in EVERY tree of the batch (a
+    result-invariant subset) and keeps issuing one level program per depth
+    for the whole batch — bit-identical to the unpruned forest."""
+    rng = np.random.default_rng(0)
+    n = 2000
+    num = rng.normal(size=(n, 4)).astype(np.float32)
+    y = (num[:, 0] > 1.2).astype(np.int32)   # skewed: leaves close early
+    ds = from_numpy(num, None, y)
+    base = RandomForest(tree_lib.TreeParams(max_depth=8, min_records=50),
+                        num_trees=3, seed=3, tree_batch=3).fit(ds)
+    for backend in ("segment", "scan"):
+        calls0 = tree_lib._BATCH_STEP_CALLS[0]
+        steps0 = tree_lib._STEP_CALLS[0]
+        pruned = RandomForest(
+            tree_lib.TreeParams(max_depth=8, min_records=50, backend=backend,
+                                prune_closed_frac=0.3),
+            num_trees=3, seed=3, tree_batch=3).fit(ds)
+        assert tree_lib._BATCH_STEP_CALLS[0] > calls0, backend
+        assert tree_lib._STEP_CALLS[0] == steps0, backend
+        for ta, tb in zip(base.trees, pruned.trees):
+            _assert_identical(ta, tb, f"batched-pruned/{backend}")
+
+
+def test_legacy_supersplit_fn_warns_and_uses_per_tree_builder(mixed_ds):
+    """A bare supersplit_fn closure (the pre-SplitEngine API) cannot ride
+    the batched builder: fit must say so (UserWarning) and fall back to
+    the per-tree path — producing the identical forest."""
+    import jax
+
+    from repro.core import splits
+
+    def legacy_fn(sorted_vals, sorted_idx, leaf_of, w, stats, cand, Lp,
+                  impurity, task, min_records):
+        def per_col(v, s, c):
+            return splits.best_numeric_split_segment(
+                v, leaf_of[s], w[s], stats[s], c, Lp, impurity, task,
+                min_records)
+        return jax.vmap(per_col)(sorted_vals, sorted_idx, cand)
+
+    p = tree_lib.TreeParams(max_depth=3)
+    plain = RandomForest(p, num_trees=2, seed=4).fit(mixed_ds)
+    calls0 = tree_lib._BATCH_STEP_CALLS[0]
+    steps0 = tree_lib._STEP_CALLS[0]
+    with pytest.warns(UserWarning, match="per-tree builder"):
+        legacy = RandomForest(p, num_trees=2, seed=4).fit(
+            mixed_ds, supersplit_fn=legacy_fn)
+    assert tree_lib._BATCH_STEP_CALLS[0] == calls0   # no batched programs
+    assert tree_lib._STEP_CALLS[0] > steps0          # per-tree dispatches
+    for ta, tb in zip(plain.trees, legacy.trees):
+        _assert_identical(ta, tb, "legacy-vs-plain")
+
+
 def test_forest_smoke_bench_runs(tmp_path, monkeypatch):
     """The forest batching benchmark's smoke mode runs in seconds and emits
     a well-formed BENCH_forest_batch.json."""

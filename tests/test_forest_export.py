@@ -1,0 +1,76 @@
+"""PackedForest stable export path (ROADMAP "Serving"): one versioned
+.npz round-trips bit-exactly and serves batched inference with no Tree
+objects or training code in the loop."""
+import numpy as np
+import pytest
+
+from repro.core import tree as tree_lib
+from repro.core.forest import PackedForest, RandomForest
+from repro.data.synthetic import make_tabular
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    ds = make_tabular("xor", 800, num_informative=2, num_useless=2, seed=0)
+    rf = RandomForest(tree_lib.TreeParams(max_depth=4), num_trees=6,
+                      seed=1).fit(ds)
+    return ds, rf
+
+
+def test_save_load_roundtrip_bit_exact(fitted, tmp_path):
+    ds, rf = fitted
+    path = tmp_path / "forest.npz"
+    rf.packed.save(path)
+    loaded = PackedForest.load(path)
+    assert loaded.num_trees == rf.packed.num_trees
+    assert loaded.m_num == rf.packed.m_num
+    assert loaded.iters == rf.packed.iters
+    for k in PackedForest._ARRAYS:
+        np.testing.assert_array_equal(np.asarray(getattr(loaded, k)),
+                                      np.asarray(getattr(rf.packed, k)),
+                                      err_msg=k)
+
+
+def test_loaded_forest_predicts_identically(fitted, tmp_path):
+    ds, rf = fitted
+    path = tmp_path / "forest.npz"
+    rf.packed.save(path)
+    loaded = PackedForest.load(path)
+    p_mem = np.asarray(rf.predict_proba(ds.num, ds.cat))
+    p_load = np.asarray(loaded.predict_proba(ds.num, ds.cat))
+    np.testing.assert_array_equal(p_mem, p_load)
+    # per-tree view too (serving's OOB/analysis path)
+    np.testing.assert_array_equal(
+        np.asarray(rf.predict_proba_per_tree(ds.num, ds.cat)),
+        np.asarray(loaded.predict_proba(ds.num, ds.cat,
+                                        reduce_mean=False)))
+
+
+def test_load_rejects_unknown_version(fitted, tmp_path):
+    ds, rf = fitted
+    path = tmp_path / "forest.npz"
+    rf.packed.save(path)
+    with np.load(path) as z:
+        blob = {k: z[k] for k in z.files}
+    blob["format_version"] = np.int32(999)
+    bad = tmp_path / "bad.npz"
+    np.savez_compressed(bad, **blob)
+    with pytest.raises(ValueError, match="format v999"):
+        PackedForest.load(bad)
+
+
+def test_export_example_runs(tmp_path):
+    """The examples/ entry is executable documentation — keep it green."""
+    import subprocess
+    import sys
+    import os
+    here = os.path.dirname(__file__)
+    out = subprocess.run(
+        [sys.executable, os.path.join(here, "..", "examples",
+                                      "forest_export.py")],
+        capture_output=True, text=True, timeout=600,
+        cwd=tmp_path,
+        env=dict(os.environ,
+                 PYTHONPATH=os.path.join(here, "..", "src")))
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "round-trip verified" in out.stdout

@@ -308,6 +308,195 @@ def test_oracle_on_degenerate_leaves():
 
 
 # ---------------------------------------------------------------------------
+# Whole-tree oracle: a recursive numpy reference builder vs build_tree
+# (ROADMAP "Exact-oracle suite follow-up")
+# ---------------------------------------------------------------------------
+
+def _np_bag_counts(seed, tree_idx, n, mode):
+    """The seeded bootstrap weights as numpy (the draw itself is pinned by
+    the deterministic PRNG; the oracle consumes, never re-derives it)."""
+    from repro.core import bagging
+    return np.asarray(bagging.bag_counts(seed, tree_idx, n, mode))
+
+
+def _np_candidates(seed, tree_idx, depth, num_leaves, m, m_prime):
+    """Per-leaf candidate masks as numpy (padding-independent draw)."""
+    import jax
+    from repro.core import bagging
+    fkey = jax.random.fold_in(jax.random.PRNGKey(seed ^ 0x5EED), tree_idx)
+    return np.asarray(bagging.candidate_features(
+        fkey, depth, num_leaves, m, m_prime))
+
+
+class _RefTree:
+    """Flat arrays grown by the reference builder (mirrors tree_lib.Tree)."""
+
+    def __init__(self, C):
+        self.feature, self.threshold, self.children = [], [], []
+        self.value, self.n_node, self.gain, self.depth = [], [], [], []
+        self._C = C
+
+    def new_node(self, depth):
+        self.feature.append(-1)
+        self.threshold.append(np.float32(0.0))
+        self.children.append([-1, -1])
+        self.value.append(np.zeros(self._C, np.float32))
+        self.n_node.append(0.0)
+        self.gain.append(0.0)
+        self.depth.append(depth)
+        return len(self.feature) - 1
+
+
+def build_tree_oracle(num, y, params, seed, tree_idx, C):
+    """Recursive (level-recursion) numpy reference builder for EXACT mode.
+
+    sklearn-style per-node exhaustive search — every candidate feature of
+    every open leaf is scored by the O(n·S) `oracle_numeric` sweep, the
+    first-best feature wins (the engines' argmax order), children are
+    numbered left-to-right in leaf order — with zero shared code with the
+    jitted engines beyond the seeded draws it consumes.  Numeric-only
+    datasets (the categorical scorer has its own exhaustive oracle above).
+    """
+    n, m = num.shape
+    task, imp = params.task, params.impurity
+    m_prime = params.num_candidates or max(
+        1, int(np.ceil(np.sqrt(m))))
+    w = _np_bag_counts(seed, tree_idx, n, params.bagging)
+    ref = _RefTree(max(C, 2) if task == "classification" else 1)
+    root = ref.new_node(0)
+
+    def node_value(node, rows):
+        stats = _row_stats_np(y[rows], w[rows], C, task).sum(0)
+        cnt = stats.sum() if task == "classification" else stats[0]
+        ref.n_node[node] = float(cnt)
+        if task == "classification":
+            ref.value[node] = (stats.astype(np.float32)
+                               / np.float32(max(cnt, 1e-12)))
+        else:
+            ref.value[node] = np.array(
+                [stats[1] / max(stats[0], 1e-12)], np.float32)
+        return cnt
+
+    def grow(frontier, depth):
+        """One level: frontier = [(node id, row mask)] in leaf order."""
+        if not frontier:
+            return
+        counts = [node_value(node, rows) for node, rows in frontier]
+        if depth >= params.max_depth:
+            return
+        cand = _np_candidates(seed, tree_idx, depth, len(frontier), m,
+                              m_prime)
+        next_frontier = []
+        for h, (node, rows) in enumerate(frontier):
+            if counts[h] < 2 * params.min_records:
+                continue
+            best_g, best_j, best_t = -np.inf, None, 0.0
+            for j in range(m):
+                if not cand[h, j]:
+                    continue
+                g, t = oracle_numeric(num[rows, j], y[rows], w[rows], C,
+                                      imp, task, params.min_records)
+                if g > best_g:                     # first feature wins ties
+                    best_g, best_j, best_t = g, j, t
+            if best_j is None or not np.isfinite(best_g) or best_g <= 1e-9:
+                continue
+            # the engines compute tau = (a + v) * 0.5 in float32
+            iv = np.sort(num[rows & (w > 0), best_j].astype(np.float32))
+            lo = iv[iv <= best_t].max()
+            hi = iv[iv > best_t].min()
+            thr = (lo + hi) * np.float32(0.5)
+            ref.feature[node] = best_j
+            ref.gain[node] = float(best_g)
+            ref.threshold[node] = thr
+            lc = ref.new_node(depth + 1)
+            rc = ref.new_node(depth + 1)
+            ref.children[node] = [lc, rc]
+            next_frontier.append((lc, rows & (num[:, best_j] <= thr)))
+            next_frontier.append((rc, rows & (num[:, best_j] > thr)))
+        grow(next_frontier, depth + 1)
+
+    grow([(root, np.ones(n, bool))], 0)
+    return ref
+
+
+def _fitted_tree(num, y, params, seed, tree_idx, task):
+    from repro.core import presort, tree as tree_lib
+    from repro.core.dataset import from_numpy
+    ds = from_numpy(num, None, y,
+                    task="regression" if task == "regression" else
+                    "classification")
+    si = presort.presort_columns(ds.num)
+    sv = presort.gather_sorted(ds.num, si)
+    tr, _ = tree_lib.build_tree(
+        num=ds.num, cat=ds.cat, labels=ds.labels, sorted_vals=sv,
+        sorted_idx=si, arities=ds.arities, num_classes=ds.num_classes,
+        params=params, seed=seed, tree_idx=tree_idx)
+    return tr, ds.num_classes
+
+
+def _assert_tree_matches_oracle(tr, ref, task, ctx):
+    assert tr.num_nodes == len(ref.feature), ctx
+    np.testing.assert_array_equal(tr.feature, ref.feature, err_msg=ctx)
+    np.testing.assert_array_equal(tr.children, ref.children, err_msg=ctx)
+    np.testing.assert_array_equal(tr.depth, ref.depth, err_msg=ctx)
+    np.testing.assert_array_equal(tr.threshold,
+                                  np.asarray(ref.threshold, np.float32),
+                                  err_msg=ctx)
+    np.testing.assert_allclose(tr.gain, ref.gain, rtol=1e-4, atol=1e-4,
+                               err_msg=ctx)
+    np.testing.assert_allclose(tr.n_node, ref.n_node, rtol=0, atol=0,
+                               err_msg=ctx)
+    np.testing.assert_allclose(tr.value, np.stack(ref.value),
+                               rtol=1e-6, atol=1e-6, err_msg=ctx)
+
+
+@pytest.mark.parametrize("backend", ["segment", "scan"])
+@pytest.mark.parametrize("seed", [0, 4])
+def test_whole_tree_matches_recursive_oracle_classification(backend, seed):
+    """Node-for-node equality of build_tree against the recursive numpy
+    reference on a small continuous classification dataset."""
+    from repro.core import tree as tree_lib
+    rng = np.random.default_rng(seed)
+    n, m, C = 400, 5, 3
+    num = rng.normal(size=(n, m)).astype(np.float32)
+    y = np.digitize(num[:, 0] + 0.7 * num[:, 1],
+                    [-0.5, 0.5]).astype(np.int32)
+    params = tree_lib.TreeParams(max_depth=4, min_records=3,
+                                 backend=backend)
+    tr, C_ds = _fitted_tree(num, y, params, seed=11, tree_idx=seed,
+                            task="classification")
+    ref = build_tree_oracle(num, y, params, seed=11, tree_idx=seed, C=C_ds)
+    _assert_tree_matches_oracle(tr, ref, "classification",
+                                f"{backend}/seed{seed}")
+
+
+def test_whole_tree_matches_recursive_oracle_regression():
+    from repro.core import tree as tree_lib
+    rng = np.random.default_rng(2)
+    n, m = 350, 4
+    num = rng.normal(size=(n, m)).astype(np.float32)
+    y = (2 * num[:, 0] + num[:, 1] ** 2
+         + 0.1 * rng.normal(size=n)).astype(np.float32)
+    params = tree_lib.TreeParams(max_depth=4, min_records=4,
+                                 impurity="variance", task="regression",
+                                 bagging="none")
+    tr, _ = _fitted_tree(num, y, params, seed=5, tree_idx=0,
+                         task="regression")
+    ref = build_tree_oracle(num, y, params, seed=5, tree_idx=0, C=2)
+    # float32 device sums vs float64 numpy sums: structure exact, float
+    # leaf statistics to tolerance
+    assert tr.num_nodes == len(ref.feature)
+    np.testing.assert_array_equal(tr.feature, ref.feature)
+    np.testing.assert_array_equal(tr.children, ref.children)
+    np.testing.assert_array_equal(tr.depth, ref.depth)
+    np.testing.assert_allclose(tr.threshold, ref.threshold,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(tr.gain, ref.gain, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(tr.value, np.stack(ref.value),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
 # Hypothesis sweep (pytest -m hypothesis; fixed profile in conftest.py)
 # ---------------------------------------------------------------------------
 
