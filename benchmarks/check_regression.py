@@ -70,8 +70,11 @@ def _run_smoke_benches(forest_batch_bench, hist_mode_bench,
     for p in hist["points"]:
         metrics[f"hist/exact_s/n{p['n']}"] = p["exact_fit_s"]
         for mode in p["hist"]:
-            metrics[f"hist/hist{mode['num_bins']}_s/n{p['n']}"] = \
-                mode["fit_s"]
+            # tagged since ISSUE 5: hist<B> = the subtraction fast path,
+            # hist<B>-plain = per-level rebuild — both gated so a lost
+            # fast path shows up as a wall regression
+            tag = mode.get("tag", f"hist{mode['num_bins']}")
+            metrics[f"hist/{tag}_s/n{p['n']}"] = mode["fit_s"]
     dist = dist_batch_bench.run(smoke=True)
     for c in dist["configs"]:
         metrics[f"dist/{c['mode']}/batched_s"] = c["batched_s"]

@@ -9,6 +9,16 @@ AUC, the exact-vs-hist AUC delta, and the fit walls, to
 ``BENCH_hist_mode.json`` — the acceptance gate is |AUC delta| <= 0.01 at
 num_bins=255.
 
+The hist FAST PATH (ISSUE 5) is measured against its own plain rebuild at
+the headline bucket budget: `hist_subtract=False` rebuilds every leaf's
+tables each level, the default builds only the smaller child and derives
+the sibling by parent − sibling.  Alongside the walls the benchmark
+records (a) the per-level merged-table payload bytes (what
+ShardedHistNumeric psums — ~2x smaller under subtraction) from a
+collect_stats fit, and (b) a table-build microbenchmark: the fused
+all-columns scatter (`splits.feature_count_tables`) vs the PR-3 era
+per-column scatter loop.
+
 Smoke mode (`--smoke` / run(smoke=True)) shrinks the point so the tier-1
 suite could run it in seconds.
 """
@@ -23,11 +33,13 @@ from benchmarks.common import emit
 OUT_PATH = os.environ.get("BENCH_HIST_MODE_JSON", "BENCH_hist_mode.json")
 
 
-def _fit_seconds(train, params, n_trees, seed):
-    """One warm fit (compile) + best-of-2 timed fits; returns (s, forest)."""
+def _fit_seconds(train, params, n_trees, seed, collect_stats=False):
+    """One warm fit (compile; optionally collect_stats for the payload
+    accounting) + best-of-2 timed fits; returns (s, timed forest, warm)."""
     from repro.core.forest import RandomForest
 
-    RandomForest(params, num_trees=n_trees, seed=seed).fit(train)  # warm
+    warm = RandomForest(params, num_trees=n_trees, seed=seed).fit(
+        train, collect_stats=collect_stats)
     best, forest = float("inf"), None
     for rep in (1, 2):
         t0 = time.perf_counter()
@@ -36,7 +48,58 @@ def _fit_seconds(train, params, n_trees, seed):
         if rep == 1:
             forest = rf
         best = min(best, dt)
-    return best, forest
+    return best, forest, warm
+
+
+def _payload_per_level(forest):
+    """Per-level merged-table payload bytes of tree 0 (collect_stats)."""
+    return [s.hist_table_bytes for s in forest.level_stats[0]]
+
+
+def _table_build_micro(train, B, Lp):
+    """Fused all-columns table build vs the per-column scatter loop, us.
+
+    Times exactly the per-level table-build work at a representative
+    frontier width: random open-leaf ids, the real bin cache, one jitted
+    program each way; best of 3 after a warm call.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import presort, splits
+
+    si = presort.presort_columns(train.num)
+    sv = presort.gather_sorted(train.num, si)
+    bin_of, _ = presort.quantize(train.num, sv, B)
+    n = train.n
+    rng = np.random.default_rng(0)
+    leaf = jnp.asarray(rng.integers(1, Lp + 1, n).astype(np.int32))
+    w = jnp.ones((n,), jnp.float32)
+    stats = splits.row_stats(train.labels, w, train.num_classes,
+                             "classification")
+
+    fused = jax.jit(lambda b, lf: splits.feature_count_tables(
+        b, lf, w, stats, Lp, B))
+    per_col = jax.jit(lambda b, lf: jax.vmap(
+        lambda col: splits.categorical_count_table(
+            col.astype(jnp.int32), lf, w, stats, Lp, B))(b))
+
+    out = {}
+    for name, fn in (("fused", fused), ("per_column", per_col)):
+        jax.block_until_ready(fn(bin_of, leaf))              # warm
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(bin_of, leaf))
+            best = min(best, time.perf_counter() - t0)
+        out[f"{name}_us"] = round(best * 1e6, 1)
+    out["speedup_fused"] = round(out["per_column_us"]
+                                 / max(out["fused_us"], 1e-9), 3)
+    emit(f"hist_mode/table_build/Lp{Lp}", out["fused_us"],
+         f"per_column={out['per_column_us']:.0f}us;"
+         f"x{out['speedup_fused']:.2f}")
+    return out
 
 
 def _bench_point(n, n_trees, depth, bins_list):
@@ -55,29 +118,63 @@ def _bench_point(n, n_trees, depth, bins_list):
     train, test = train_test_split(ds)
     exact_p = tree_lib.TreeParams(max_depth=depth, min_records=1)
 
-    exact_s, exact_rf = _fit_seconds(train, exact_p, n_trees, 10)
+    exact_s, exact_rf, _ = _fit_seconds(train, exact_p, n_trees, 10)
     exact_auc = exact_rf.auc(test)
     emit(f"hist_mode/exact/n{n}", exact_s * 1e6, f"auc={exact_auc:.4f}")
 
     modes = []
+    payloads = {}
+    headline_B = bins_list[0]
     for B in bins_list:
         hist_p = dataclasses.replace(exact_p, split_mode="hist", num_bins=B)
-        hist_s, hist_rf = _fit_seconds(train, hist_p, n_trees, 10)
-        hist_auc = hist_rf.auc(test)
-        delta = hist_auc - exact_auc
-        emit(f"hist_mode/hist{B}/n{n}", hist_s * 1e6,
-             f"auc={hist_auc:.4f};delta={delta:+.4f};"
-             f"speedup=x{exact_s / hist_s:.2f}")
-        modes.append({
-            "num_bins": B, "fit_s": round(hist_s, 4),
-            "auc": round(hist_auc, 5),
-            "auc_delta_vs_exact": round(delta, 5),
-            "speedup_vs_exact": round(exact_s / hist_s, 3),
-        })
+        variants = [("", hist_p)]
+        if B == headline_B:
+            # the regression-gate contrast point: plain per-level rebuild
+            variants.append(("-plain", dataclasses.replace(
+                hist_p, hist_subtract=False)))
+        for suffix, p in variants:
+            tag = f"hist{B}{suffix}"
+            collect = B == headline_B
+            hist_s, hist_rf, warm = _fit_seconds(train, p, n_trees, 10,
+                                                 collect_stats=collect)
+            hist_auc = hist_rf.auc(test)
+            delta = hist_auc - exact_auc
+            emit(f"hist_mode/{tag}/n{n}", hist_s * 1e6,
+                 f"auc={hist_auc:.4f};delta={delta:+.4f};"
+                 f"speedup=x{exact_s / hist_s:.2f}")
+            if collect:
+                payloads[tag] = _payload_per_level(warm)
+            modes.append({
+                "tag": tag, "num_bins": B,
+                "hist_subtract": p.hist_subtract,
+                "fit_s": round(hist_s, 4),
+                "auc": round(hist_auc, 5),
+                "auc_delta_vs_exact": round(delta, 5),
+                "speedup_vs_exact": round(exact_s / hist_s, 3),
+            })
+
+    table_build = _table_build_micro(train, headline_B,
+                                     Lp=min(64, 2 ** (depth - 1)))
+    fast = next(m for m in modes if m["tag"] == f"hist{headline_B}")
+    plain = next(m for m in modes if m["tag"] == f"hist{headline_B}-plain")
+    fast["speedup_vs_plain_rebuild"] = round(
+        plain["fit_s"] / fast["fit_s"], 3)
+    pf, pp = payloads[fast["tag"]], payloads[plain["tag"]]
+    payload = {
+        "fast_bytes_per_level": pf, "plain_bytes_per_level": pp,
+        "fast_total_bytes": int(sum(pf)), "plain_total_bytes": int(sum(pp)),
+        "plain_over_fast": round(sum(pp) / max(sum(pf), 1), 3),
+        "note": ("merged-table bytes per level (m·width·B·S f32) — the "
+                 "ShardedHistNumeric psum payload; subtraction sends only "
+                 "the packed smaller-child slots (width Lp//2+1 vs Lp+1)"),
+    }
+    emit(f"hist_mode/psum_payload/n{n}", 0.0,
+         f"plain/fast=x{payload['plain_over_fast']:.2f}")
     return {
         "n": n, "n_trees": n_trees, "max_depth": depth,
         "exact_fit_s": round(exact_s, 4), "exact_auc": round(exact_auc, 5),
-        "hist": modes,
+        "hist": modes, "table_build": table_build,
+        "psum_payload": payload,
     }
 
 
@@ -90,20 +187,26 @@ def run(smoke: bool = False):
         points = [(50_000, 8, 8, (255, 64, 16))]
 
     results = [_bench_point(*pt) for pt in points]
-    headline = next(m for m in results[0]["hist"] if m["num_bins"] == 255)
+    headline = next(m for m in results[0]["hist"]
+                    if m["tag"] == "hist255")
     report = {
         "workload": {"family": "majority", "m_num": 16, "backend": "segment",
                      "test_frac": 0.25, "device": jax.default_backend(),
                      "cpu_count": os.cpu_count()},
         "points": results,
         "auc_delta_at_255_bins": headline["auc_delta_vs_exact"],
+        "speedup_fast_vs_plain_at_255_bins":
+            headline.get("speedup_vs_plain_rebuild"),
         "smoke": smoke,
         "note": ("same forest schedule (seed, trees, depth) trained with "
                  "split_mode='exact' (the paper's midpoint-exhaustive "
                  "search) vs 'hist' (PLANET-style: <= num_bins quantile "
                  "buckets per column, boundaries scored from per-leaf "
                  "(bin x class) count tables); auc on a 25% holdout; "
-                 "acceptance gate |auc_delta_at_255_bins| <= 0.01"),
+                 "acceptance gate |auc_delta_at_255_bins| <= 0.01.  "
+                 "hist<B> runs the ISSUE-5 fast path (bit-packed bin "
+                 "cache + fused table build + parent-sibling "
+                 "subtraction); hist<B>-plain disables subtraction"),
     }
     with open(OUT_PATH, "w") as f:
         json.dump(report, f, indent=2)

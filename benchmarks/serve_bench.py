@@ -1,0 +1,80 @@
+"""Serving micro-benchmark: p50 single-row latency off a loaded forest.
+
+The serving path under test is exactly what a long-lived inference
+process runs (ROADMAP "serving export path" wire-up): train a small
+forest, `PackedForest.save` it to one versioned .npz, `ForestServer.load`
+it back (which compiles the whole-forest descent with a warm-up call),
+then time per-call latency of `predict` on single rows — p50/p90 over a
+few hundred calls, no compile time included (that is the point of the
+warm-up).  Results go to ``BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+from benchmarks.common import emit
+
+OUT_PATH = os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json")
+
+
+def run(smoke: bool = False, calls: int = 300):
+    import jax
+    import numpy as np
+
+    from repro.core import tree as tree_lib
+    from repro.core.forest import RandomForest
+    from repro.data.synthetic import make_tabular
+    from repro.serve.engine import ForestServer
+
+    n, n_trees, depth = (2_000, 4, 5) if smoke else (20_000, 32, 8)
+    ds = make_tabular("majority", n, num_informative=6, num_useless=10,
+                      seed=7)
+    rf = RandomForest(tree_lib.TreeParams(max_depth=depth),
+                      num_trees=n_trees, seed=1).fit(ds)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "forest.npz")
+        rf.packed.save(path)
+        t0 = time.perf_counter()
+        srv = ForestServer.load(path)          # includes the warm-up jit
+        load_s = time.perf_counter() - t0
+
+    row = np.asarray(ds.num[:1])
+    lats = []
+    for _ in range(calls):
+        t0 = time.perf_counter()
+        jax.block_until_ready(srv.predict(row))
+        lats.append(time.perf_counter() - t0)
+    lats = np.sort(np.asarray(lats))
+    p50 = float(lats[len(lats) // 2])
+    p90 = float(lats[int(len(lats) * 0.9)])
+
+    emit(f"serve/p50_single_row/T{n_trees}", p50 * 1e6,
+         f"p90={p90 * 1e6:.0f}us;load={load_s:.2f}s")
+    report = {
+        "n_trees": n_trees, "max_depth": depth, "calls": calls,
+        "load_and_warmup_s": round(load_s, 4),
+        "p50_single_row_us": round(p50 * 1e6, 1),
+        "p90_single_row_us": round(p90 * 1e6, 1),
+        "smoke": smoke,
+        "note": ("ForestServer.load (PackedForest .npz + warm-up jit) then "
+                 "per-call wall of predict on a single row; the warm-up "
+                 "means no call pays the descent trace"),
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    emit("serve/json", 0.0, OUT_PATH)
+    return report
+
+
+def main() -> None:
+    import sys
+    run(smoke="--smoke" in sys.argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -57,14 +57,16 @@ class TabularDataset:
         Standalone convenience (presorts internally — the fits reuse their
         own presort and call `presort.quantize` directly): buckets every
         numeric column into <= num_bins equi-depth quantile buckets.
-        Returns (bin_of (m_num, n) int32, edges (m_num, num_bins) float32);
-        both empty when there are no numeric columns.  Useful for feeding
-        precomputed bucket state to `tree.build_tree`/`build_forest` or for
-        inspecting the quantizer in tests.
+        Returns (bin_of (m_num, n) bit-packed bucket ids —
+        `presort.bin_dtype`: uint8 for <= 256 bins, uint16 past — and
+        edges (m_num, num_bins) float32); both empty when there are no
+        numeric columns.  Useful for feeding precomputed bucket state to
+        `tree.build_tree`/`build_forest` or for inspecting the quantizer
+        in tests.
         """
         from repro.core import presort
         if not self.m_num:
-            return (jnp.zeros((0, self.n), jnp.int32),
+            return (jnp.zeros((0, self.n), presort.bin_dtype(num_bins)),
                     jnp.zeros((0, num_bins), jnp.float32))
         sorted_idx = presort.presort_columns(self.num)
         sorted_vals = presort.gather_sorted(self.num, sorted_idx)

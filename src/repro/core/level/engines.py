@@ -37,15 +37,24 @@ class LevelInputs(NamedTuple):
 
     Batch-native engines receive the same tuple with a leading tree axis T
     on the per-tree fields (`ord_idx`, `leaf_of`, `w`, `stats`, `totals`,
-    `row_counts`); the shared read-only fields (`num`, `cat`, `labels`,
-    `sorted_vals`, `sorted_idx`, `bin_of`, `bin_edges`) never batch.
+    `row_counts`, `prev_tables`, `parent_of`, `sib_of`, `slot_of`); the
+    shared read-only fields (`num`, `cat`, `labels`, `sorted_vals`,
+    `sorted_idx`, `bin_of`, `bin_edges`) never batch.
+
+    The last four fields are the histogram-subtraction state (DESIGN.md
+    §6), present only when the plan carries tables (`st.subtract`):
+    `prev_tables` holds the previous level's merged per-leaf tables
+    (indexed by the previous level's leaf ids), and the three per-leaf
+    maps relate the CURRENT frontier to it — `parent_of[l]` is l's parent
+    leaf id at the previous level, `sib_of[l]` its sibling's current id,
+    `slot_of[l]` its packed build slot (0 = table derived by subtraction).
     """
     num: jnp.ndarray           # (n, m_num) raw numeric columns
     cat: jnp.ndarray           # (n, m_cat) raw categorical columns
     labels: jnp.ndarray        # (n,) class ids / regression targets
     sorted_vals: jnp.ndarray   # (m_num, n) presorted values (or (0, 0))
     sorted_idx: jnp.ndarray    # (m_num, n) presorted row ids (or (0, 0))
-    bin_of: jnp.ndarray        # (m_num, n) hist bucket ids (or (0, 0))
+    bin_of: jnp.ndarray        # (m_num, n) packed hist bucket ids (or (0, 0))
     bin_edges: jnp.ndarray     # (m_num, B) hist bucket edges (or (0, 0))
     ord_idx: jnp.ndarray       # (m_num, n) (leaf, value)-sorted order (or (0, 0))
     leaf_of: jnp.ndarray       # (n,) leaf id per row, 0 = closed
@@ -53,10 +62,22 @@ class LevelInputs(NamedTuple):
     stats: jnp.ndarray         # (n, S) row stats
     totals: jnp.ndarray        # (L+1, S) per-leaf stat totals
     row_counts: jnp.ndarray    # (L+1,) rows per leaf (leaf-ordered layout)
+    prev_tables: jnp.ndarray = None   # (m_num, Wprev, B, S) previous level
+    parent_of: jnp.ndarray = None     # (L+1,) parent leaf id at prev level
+    sib_of: jnp.ndarray = None        # (L+1,) sibling's current leaf id
+    slot_of: jnp.ndarray = None       # (L+1,) packed build slot, 0 = derive
 
 
 class LevelStatics(NamedTuple):
-    """The hashable static config shared by every engine call."""
+    """The hashable static config shared by every engine call.
+
+    `carry_tables`/`subtract` are per-DISPATCH statics the plan fills in
+    (plan.statics defaults them off): `carry_tables` asks a histogram
+    engine to also return its merged tables (the loop state of the
+    subtraction recurrence); `subtract` means the inputs carry a valid
+    previous level (prev_tables + maps), so only build-slot leaves are
+    scattered and siblings derive by parent − sibling.
+    """
     m_num: int
     m_cat: int
     max_arity: int
@@ -65,6 +86,8 @@ class LevelStatics(NamedTuple):
     impurity: str
     task: str
     min_records: float
+    carry_tables: bool = False
+    subtract: bool = False
 
 
 class SplitEngine:
@@ -75,6 +98,11 @@ class SplitEngine:
     uses_ord: bool = False      # True: wants the incremental leaf order
     needs_sorted: bool = False  # True: wants sorted_vals/sorted_idx
     needs_bins: bool = False    # True: wants bin_of/bin_edges (hist layout)
+    bin_cut_thresholds: bool = False  # True: thresholds are BIN INDICES
+                                # (host decodes via edges; condition eval
+                                # runs on the bin cache, not float columns)
+    carries_tables: bool = False  # True: supports the table-carrying
+                                # subtraction protocol (st.carry_tables)
 
     def supersplits(self, inp: LevelInputs, st: LevelStatics, Lp: int,
                     cand: jnp.ndarray):
@@ -172,31 +200,99 @@ class ExactNumeric(SplitEngine):
             inp.w, inp.stats, cand, Lp, st.impurity, st.task, st.min_records)
 
 
+# ---------------------------------------------------------------------------
+# Histogram-mode table building (shared by HistNumeric and the mesh engine)
+# ---------------------------------------------------------------------------
+
+def _hist_build_rows(inp, subtract, compact):
+    """The (bin_of, scatter slots, w, stats, labels) a table build reads.
+
+    Plain mode scatters every row under its raw leaf id.  Subtraction mode
+    remaps rows through `slot_of` — rows of derive-slot leaves land in the
+    discarded slot 0 — and, when `compact` (single-device only: the bound
+    below is global, not per row shard), GATHERS the build rows into an
+    n//2 buffer first, so the scatter touches at most half the rows: build
+    leaves are the smaller child of every split, so their row total is
+    ≤ floor(n/2).  Compaction keeps row order (nonzero is stable), so the
+    per-slot accumulation order — and hence the tables — match the
+    uncompacted scatter exactly.
+    """
+    if not subtract:
+        return inp.bin_of, inp.leaf_of, inp.w, inp.stats, inp.labels
+    slot_row = inp.slot_of[inp.leaf_of]                   # (n,) build slots
+    if not compact:
+        return inp.bin_of, slot_row, inp.w, inp.stats, inp.labels
+    n = inp.leaf_of.shape[0]
+    n2 = max(n // 2, 1)
+    idx = jnp.nonzero(slot_row > 0, size=n2, fill_value=n)[0]
+    valid = idx < n
+    idxc = jnp.minimum(idx, n - 1)
+    return (inp.bin_of[:, idxc],
+            jnp.where(valid, slot_row[idxc], 0),
+            jnp.where(valid, inp.w[idxc], 0.0),
+            inp.stats[idxc], inp.labels[idxc])
+
+
+def _expand_subtracted(packed, prev_tables, parent_of, sib_of, slot_of):
+    """Full-width tables from packed build tables + the parent recurrence.
+
+    packed: (m, Wb, B, S) merged build-slot tables; returns (m, L+1, B, S)
+    where build leaves gather their packed slot and every derive leaf is
+    `parent − sibling` — exact for classification (integer-valued counts),
+    which is why the plan only enables subtraction there.
+    """
+    from_build = packed[:, slot_of]                       # (m, L+1, B, S)
+    sib = packed[:, slot_of[sib_of]]
+    derived = prev_tables[:, parent_of] - sib
+    return jnp.where((slot_of > 0)[None, :, None, None], from_build, derived)
+
+
 @dataclasses.dataclass(frozen=True)
 class HistNumeric(SplitEngine):
-    """PLANET-style histogram numeric search (DESIGN.md §6): per-leaf
-    (bin × stat) count tables through the categorical scatter-add path
-    (Pallas `cat_hist` under backend="kernel"), bucket boundaries scored by
-    `splits.best_numeric_split_histogram`."""
+    """PLANET-style histogram numeric search (DESIGN.md §6).
+
+    Reads ONLY the bit-packed bin cache (`bin_of`, uint8/uint16): per-leaf
+    (bin × stat) tables for all columns are built in one pass — the Pallas
+    `feat_hist` kernel under backend="kernel", a single flat scatter
+    (`splits.feature_count_tables`) otherwise — and
+    `splits.best_numeric_split_histogram` scores the bucket boundaries,
+    returning BIN INDICES the host decodes against the (host-side) float
+    edges.  Under `st.subtract` only the smaller child of each split is
+    scattered (rows compacted to an n//2 buffer) and its sibling derives
+    by parent − sibling from the carried previous-level tables.
+    """
     backend: str = "segment"
 
     needs_bins = True
+    bin_cut_thresholds = True
+    carries_tables = True
 
-    def supersplits(self, inp, st, Lp, cand):
+    def _tables(self, inp, st, W, bins, slots, w, stats, labels):
         if self.backend == "kernel":
             from repro.kernels import ops as kops
-            tables = kops.categorical_tables(
-                inp.bin_of, inp.leaf_of, inp.w, inp.labels, V=st.num_bins,
-                Lp=Lp, task=st.task, num_classes=st.num_classes)
+            return kops.feature_tables(
+                bins, slots, w, labels, B=st.num_bins, W=W, task=st.task,
+                num_classes=st.num_classes)
+        return splits.feature_count_tables(bins, slots, w, stats, W - 1,
+                                           st.num_bins)
+
+    def supersplits(self, inp, st, Lp, cand):
+        Wb = Lp // 2 + 1 if st.subtract else Lp + 1
+        bins, slots, w, stats, labels = _hist_build_rows(
+            inp, st.subtract, compact=True)
+        packed = self._tables(inp, st, Wb, bins, slots, w, stats, labels)
+        if st.subtract:
+            tables = _expand_subtracted(packed, inp.prev_tables,
+                                        inp.parent_of, inp.sib_of,
+                                        inp.slot_of)
         else:
-            tables = jax.vmap(
-                lambda b: splits.categorical_count_table(
-                    b, inp.leaf_of, inp.w, inp.stats, Lp, st.num_bins))(
-                inp.bin_of)
-        return jax.vmap(
-            lambda tb, e, c: splits.best_numeric_split_histogram(
-                tb, e, c, st.impurity, st.task, st.min_records))(
-            tables, inp.bin_edges, cand)
+            tables = packed
+        g, c = jax.vmap(
+            lambda tb, cd: splits.best_numeric_split_histogram(
+                tb, cd, st.impurity, st.task, st.min_records))(tables, cand)
+        if st.carry_tables:
+            return g, c, tables
+        return g, c
 
 
 @dataclasses.dataclass(frozen=True)

@@ -85,6 +85,7 @@ class LevelPlan:
     impurity: str
     task: str
     min_records: float
+    hist_subtract: bool = True
 
     @property
     def statics(self) -> LevelStatics:
@@ -105,6 +106,44 @@ class LevelPlan:
         """The level step reads sorted_vals/sorted_idx (vs zero dummies)."""
         return bool(self.m_num) and self.numeric.needs_sorted \
             and not self.use_ord
+
+    @property
+    def use_bin_cuts(self) -> bool:
+        """The numeric engine reports BIN INDICES, not float thresholds:
+        condition evaluation runs on the bit-packed bin cache and the host
+        decodes thresholds from the (host-side) float edges — no float32
+        column and no edge array inside the level program (DESIGN.md §6).
+        """
+        return bool(self.m_num) and self.numeric is not None \
+            and self.numeric.bin_cut_thresholds
+
+    @property
+    def pass_num(self) -> bool:
+        """The level step reads the raw float numeric columns (vs zero
+        dummies) — every mode except the bin-cache hist fast path."""
+        return bool(self.m_num) and not self.use_bin_cuts
+
+    @property
+    def pass_edges(self) -> bool:
+        """The level step reads the float bucket edges on DEVICE — only
+        legacy hist closures (LegacyFn), which score and return float
+        thresholds themselves."""
+        return bool(self.m_num) and self.numeric is not None \
+            and self.numeric.needs_bins and not self.use_bin_cuts
+
+    @property
+    def carries_tables(self) -> bool:
+        """Histogram subtraction is on: the level loop carries each
+        level's merged per-leaf tables and every level builds only the
+        smaller child of each split, deriving the sibling as
+        parent − sibling.  Classification only: its table entries are
+        integer-valued bag counts, so the subtraction is EXACT (bit-equal
+        to a plain rebuild, which tests assert); regression tables hold
+        float y-sums whose subtraction could drift in the last ulp, so
+        regression always rebuilds plain.
+        """
+        return self.use_bin_cuts and self.numeric.carries_tables \
+            and self.hist_subtract and self.task == "classification"
 
     @property
     def row_shards(self) -> int:
@@ -152,7 +191,8 @@ def make_plan(params, *, m_num: int, m_cat: int, max_arity: int,
         m_num=m_num, m_cat=m_cat, max_arity=max_arity,
         num_classes=num_classes, m_prime=m_prime, usb=params.usb,
         num_bins=params.num_bins, impurity=params.impurity,
-        task=params.task, min_records=params.min_records)
+        task=params.task, min_records=params.min_records,
+        hist_subtract=getattr(params, "hist_subtract", True))
 
 
 # ---------------------------------------------------------------------------
@@ -238,18 +278,29 @@ def _partition_leaf_order(ord_idx, lf_pos, bits, new_left, new_right,
 
 
 def _eval_conditions_core(num, cat, leaf_of, feat_of_leaf, thr_of_leaf,
-                          iscat_of_leaf, mask_of_leaf, m_num):
+                          iscat_of_leaf, mask_of_leaf, m_num, bin_of=None):
     """Alg. 2 step 5: evaluate the winning condition of each sample's leaf.
 
     Returns bits (n,) bool — True = LEFT.  In the distributed engine this is
     the 1-bit-per-sample payload that gets allreduced (see distributed.py).
+
+    When `bin_of` is given (the hist fast path, plan.use_bin_cuts) the
+    numeric condition is evaluated on the bit-packed bin cache instead of
+    the float columns: `thr_of_leaf` then holds the winning BIN INDEX and
+    `bin <= cut  <=>  x <= edges[cut]` (presort.quantize_edges), so the
+    partition is identical while the program never reads float32 columns.
     """
     f = feat_of_leaf[leaf_of]                                   # (n,)
     jn = jnp.clip(f, 0, max(m_num - 1, 0))
     jc = jnp.clip(f - m_num, 0, max(cat.shape[1] - 1, 0))
-    xnum = jnp.take_along_axis(num, jn[:, None], axis=1)[:, 0] if num.size else jnp.zeros_like(leaf_of, jnp.float32)
+    if bin_of is not None and bin_of.size:
+        xbin = bin_of[jn, jnp.arange(leaf_of.shape[0])].astype(jnp.int32)
+        num_bit = xbin <= thr_of_leaf[leaf_of].astype(jnp.int32)
+    else:
+        xnum = (jnp.take_along_axis(num, jn[:, None], axis=1)[:, 0]
+                if num.size else jnp.zeros_like(leaf_of, jnp.float32))
+        num_bit = xnum <= thr_of_leaf[leaf_of]
     xcat = jnp.take_along_axis(cat, jc[:, None], axis=1)[:, 0] if cat.size else jnp.zeros_like(leaf_of)
-    num_bit = xnum <= thr_of_leaf[leaf_of]
     cat_bit = mask_of_leaf[leaf_of, xcat]
     return jnp.where(iscat_of_leaf[leaf_of], cat_bit, num_bit)
 
@@ -277,9 +328,10 @@ def _candidates_batched(fkeys, depth, splittable_p, Lp, plan):
 
 def _level_step_core(num, cat, labels, sorted_vals, sorted_idx, bin_of,
                      bin_edges, ord_idx, leaf_of, w, stats, splittable_p,
-                     totals, row_counts, fkey, depth, *, plan, Lp,
-                     need_partition, fused_tail=True, pre_num=None,
-                     pre_cat=None):
+                     totals, row_counts, prev_tables, parent_of, sib_of,
+                     slot_of, fkey, depth, *, plan, Lp, need_partition,
+                     subtract=False, fused_tail=True, pre_num=None,
+                     pre_cat=None, pre_tables=None):
     """One whole depth level of Alg. 2 as a single device program.
 
     Steps 3-7 fused: candidate feature draw, numeric + categorical engine
@@ -287,11 +339,15 @@ def _level_step_core(num, cat, labels, sorted_vals, sorted_idx, bin_of,
     evaluation, leaf reassignment, and the next level's leaf totals.  Only
     the returned per-leaf struct (winning feature, gain, threshold,
     category mask, split bitmap) is fetched by the host; the row-indexed
-    state (`leaf_of`, the per-column leaf order) stays device-resident.
+    state (`leaf_of`, the per-column leaf order) stays device-resident —
+    as do the carried histogram tables when the plan runs the subtraction
+    recurrence (`prev_tables` + the parent/sib/slot maps; `subtract` is
+    the static saying they are valid this level, i.e. not the root).
 
     `pre_num`/`pre_cat` carry the (gains, thresholds/masks) a batch-native
     engine already computed for this tree OUTSIDE the tree-axis vmap; when
-    given, the corresponding engine is not called here.
+    given, the corresponding engine is not called here (`pre_tables` are
+    the new carried tables it returned alongside).
     """
     m_num, m_cat = plan.m_num, plan.m_cat
     L1 = Lp + 1
@@ -304,23 +360,31 @@ def _level_step_core(num, cat, labels, sorted_vals, sorted_idx, bin_of,
                       sorted_vals=sorted_vals, sorted_idx=sorted_idx,
                       bin_of=bin_of, bin_edges=bin_edges, ord_idx=ord_idx,
                       leaf_of=leaf_of, w=w, stats=stats, totals=totals,
-                      row_counts=row_counts)
+                      row_counts=row_counts, prev_tables=prev_tables,
+                      parent_of=parent_of, sib_of=sib_of, slot_of=slot_of)
+    carries = plan.carries_tables
+    statics = plan.statics._replace(carry_tables=carries, subtract=subtract)
 
     gains_parts, masks = [], None
+    new_tables = pre_tables
     thr_num = jnp.zeros((max(m_num, 1), L1), jnp.float32)
     if m_num:
         if pre_num is not None:
             g, t = pre_num
         else:
-            g, t = plan.numeric.supersplits(inp, plan.statics, Lp,
-                                            cand_p[:, :m_num].T)
+            res = plan.numeric.supersplits(inp, statics, Lp,
+                                           cand_p[:, :m_num].T)
+            if carries:
+                g, t, new_tables = res
+            else:
+                g, t = res
         gains_parts.append(g)
         thr_num = t
     if m_cat:
         if pre_cat is not None:
             g, masks = pre_cat
         else:
-            g, masks = plan.categorical.supersplits(inp, plan.statics, Lp,
+            g, masks = plan.categorical.supersplits(inp, statics, Lp,
                                                     cand_p[:, m_num:].T)
         gains_parts.append(g)
 
@@ -352,7 +416,9 @@ def _level_step_core(num, cat, labels, sorted_vals, sorted_idx, bin_of,
     # Alg. 2 steps 5-6: 1-bit condition per sample, reassign to children
     bits = _eval_conditions_core(num, cat, leaf_of, feat_of_leaf,
                                  thr_of_leaf, iscat_of_leaf, mask_of_leaf,
-                                 m_num)
+                                 m_num,
+                                 bin_of=bin_of if plan.use_bin_cuts
+                                 else None)
     new_leaf_of = jnp.where(
         leaf_of > 0,
         jnp.where(bits, new_left[leaf_of], new_right[leaf_of]), 0)
@@ -368,18 +434,21 @@ def _level_step_core(num, cat, labels, sorted_vals, sorted_idx, bin_of,
         # batched-operand scatters, ~2x slower on CPU.  Hand back the
         # per-tree pieces the wrapper needs.
         part = (bits, new_left, new_right) if use_ord else None
-        return struct, new_leaf_of, ord_idx, None, part
+        return struct, new_leaf_of, ord_idx, None, part, new_tables
 
     # next-level totals (node values / counts / splittable for depth+1)
     inb = (w > 0) & (new_leaf_of > 0)
     next_totals = jax.ops.segment_sum(jnp.where(inb[:, None], stats, 0.0),
                                       new_leaf_of, num_segments=2 * Lp + 1)
 
-    if use_ord:
+    if use_ord or carries:
+        # next level's per-child row counts: the ord layout's row_counts,
+        # and (subtraction) what the host uses to pick each split's
+        # SMALLER child as the build leaf
         key_counts = jax.ops.segment_sum(jnp.ones((n,), jnp.int32),
                                          new_leaf_of, num_segments=2 * Lp + 1)
-        # becomes the next level's row_counts (host slices to the new Lp)
         struct["key_counts"] = key_counts
+    if use_ord:
         if need_partition:
             lf_pos = leaf_of[ord_idx[0]]
             new_ord_idx = _partition_leaf_order(
@@ -389,30 +458,34 @@ def _level_step_core(num, cat, labels, sorted_vals, sorted_idx, bin_of,
             new_ord_idx = ord_idx
     else:
         new_ord_idx = ord_idx
-    return struct, new_leaf_of, new_ord_idx, next_totals, None
+    return struct, new_leaf_of, new_ord_idx, next_totals, None, new_tables
 
 
-_LEVEL_STATICS = ("plan", "Lp", "need_partition")
+_LEVEL_STATICS = ("plan", "Lp", "need_partition", "subtract")
 
 
 @functools.partial(jax.jit, static_argnames=_LEVEL_STATICS)
 def _fused_level_step(num, cat, labels, sorted_vals, sorted_idx, bin_of,
                       bin_edges, ord_idx, leaf_of, w, stats, splittable_p,
-                      totals, row_counts, fkey, depth, *, plan, Lp,
-                      need_partition):
+                      totals, row_counts, prev_tables, parent_of, sib_of,
+                      slot_of, fkey, depth, *, plan, Lp, need_partition,
+                      subtract=False):
     """The per-tree fused level step (see `_level_step_core`)."""
-    struct, new_leaf_of, new_ord_idx, next_totals, _ = _level_step_core(
-        num, cat, labels, sorted_vals, sorted_idx, bin_of, bin_edges,
-        ord_idx, leaf_of, w, stats, splittable_p, totals, row_counts, fkey,
-        depth, plan=plan, Lp=Lp, need_partition=need_partition)
-    return struct, new_leaf_of, new_ord_idx, next_totals
+    struct, new_leaf_of, new_ord_idx, next_totals, _, new_tables = \
+        _level_step_core(
+            num, cat, labels, sorted_vals, sorted_idx, bin_of, bin_edges,
+            ord_idx, leaf_of, w, stats, splittable_p, totals, row_counts,
+            prev_tables, parent_of, sib_of, slot_of, fkey, depth, plan=plan,
+            Lp=Lp, need_partition=need_partition, subtract=subtract)
+    return struct, new_leaf_of, new_ord_idx, next_totals, new_tables
 
 
 @functools.partial(jax.jit, static_argnames=_LEVEL_STATICS)
 def _fused_level_step_batched(num, cat, labels, sorted_vals, sorted_idx,
                               bin_of, bin_edges, ord_idx, leaf_of, w, stats,
-                              splittable_p, totals, row_counts, fkeys, depth,
-                              *, plan, Lp, need_partition):
+                              splittable_p, totals, row_counts, prev_tables,
+                              parent_of, sib_of, slot_of, fkeys, depth,
+                              *, plan, Lp, need_partition, subtract=False):
     """One depth level of EVERY tree in a batch as a single device program.
 
     Trees are independent, so the whole fused level step — candidate draw,
@@ -467,9 +540,11 @@ def _fused_level_step_batched(num, cat, labels, sorted_vals, sorted_idx,
     T, n = leaf_of.shape
     m_num, m_cat = plan.m_num, plan.m_cat
     use_ord = plan.use_ord
+    carries = plan.carries_tables
 
     # batch-native (mesh) engines: one sharded search for the whole batch
     pres: list = []
+    pre_tables = None
     has_pre_num = bool(m_num) and plan.numeric.batch_native
     has_pre_cat = bool(m_cat) and plan.categorical.batch_native
     if has_pre_num or has_pre_cat:
@@ -479,13 +554,21 @@ def _fused_level_step_batched(num, cat, labels, sorted_vals, sorted_idx,
                             bin_of=bin_of, bin_edges=bin_edges,
                             ord_idx=ord_idx, leaf_of=leaf_of, w=w,
                             stats=stats, totals=totals,
-                            row_counts=row_counts)
+                            row_counts=row_counts, prev_tables=prev_tables,
+                            parent_of=parent_of, sib_of=sib_of,
+                            slot_of=slot_of)
+        statics_b = plan.statics._replace(carry_tables=carries,
+                                          subtract=subtract)
         if has_pre_num:
-            pres += list(plan.numeric.supersplits_batched(
-                inp_b, plan.statics, Lp, cand_b[:, :m_num]))
+            res = plan.numeric.supersplits_batched(
+                inp_b, statics_b, Lp, cand_b[:, :m_num])
+            if carries:
+                pre_tables = res[2]      # carried OUTSIDE the tree vmap
+                res = res[:2]
+            pres += list(res)
         if has_pre_cat:
             pres += list(plan.categorical.supersplits_batched(
-                inp_b, plan.statics, Lp, cand_b[:, m_num:]))
+                inp_b, statics_b, Lp, cand_b[:, m_num:]))
 
     def _unpack_pre(rest):
         pn = pc = None
@@ -498,41 +581,50 @@ def _fused_level_step_batched(num, cat, labels, sorted_vals, sorted_idx,
     if T * max(m_num, 1) * n > _batch_vmap_elems():
         # cache-bound regime: run the trees sequentially INSIDE the program
         def body(args):
-            ord_t, leaf_t, w_t, stats_t, sp_t, tot_t, rc_t, fk_t = args[:8]
-            pn, pc = _unpack_pre(args[8:])
-            s, nl, no, nt, _ = _level_step_core(
+            (ord_t, leaf_t, w_t, stats_t, sp_t, tot_t, rc_t, pt_t, par_t,
+             sib_t, slot_t, fk_t) = args[:12]
+            pn, pc = _unpack_pre(args[12:])
+            s, nl, no, nt, _, ntab = _level_step_core(
                 num, cat, labels, sorted_vals, sorted_idx, bin_of,
                 bin_edges, ord_t, leaf_t, w_t, stats_t, sp_t, tot_t, rc_t,
-                fk_t, depth, plan=plan, Lp=Lp,
-                need_partition=need_partition, fused_tail=True,
-                pre_num=pn, pre_cat=pc)
-            return s, nl, no, nt
+                pt_t, par_t, sib_t, slot_t, fk_t, depth, plan=plan, Lp=Lp,
+                need_partition=need_partition, subtract=subtract,
+                fused_tail=True, pre_num=pn, pre_cat=pc)
+            return s, nl, no, nt, ntab
 
-        struct, new_leaf_of, new_ord_idx, next_totals = jax.lax.map(
-            body, tuple([ord_idx, leaf_of, w, stats, splittable_p, totals,
-                         row_counts, fkeys] + pres))
+        struct, new_leaf_of, new_ord_idx, next_totals, new_tables = \
+            jax.lax.map(
+                body, tuple([ord_idx, leaf_of, w, stats, splittable_p,
+                             totals, row_counts, prev_tables, parent_of,
+                             sib_of, slot_of, fkeys] + pres))
+        if pre_tables is not None:
+            new_tables = pre_tables
         # rows closed in EVERY tree: the (free) batched-pruning trigger —
         # the driver reads it from the fetched struct instead of issuing a
         # separate reduction + host sync per level
         struct = dict(struct, closed_rows=jnp.sum(
             ~(new_leaf_of > 0).any(axis=0)))
-        return struct, new_leaf_of, new_ord_idx, next_totals
+        return struct, new_leaf_of, new_ord_idx, next_totals, new_tables
 
     def vcore(num, cat, labels, sorted_vals, sorted_idx, bin_of, bin_edges,
-              ord_t, leaf_t, w_t, stats_t, sp_t, tot_t, rc_t, fk_t, depth,
-              *rest):
+              ord_t, leaf_t, w_t, stats_t, sp_t, tot_t, rc_t, pt_t, par_t,
+              sib_t, slot_t, fk_t, depth, *rest):
         pn, pc = _unpack_pre(rest)
         return _level_step_core(
             num, cat, labels, sorted_vals, sorted_idx, bin_of, bin_edges,
-            ord_t, leaf_t, w_t, stats_t, sp_t, tot_t, rc_t, fk_t, depth,
-            plan=plan, Lp=Lp, need_partition=need_partition,
+            ord_t, leaf_t, w_t, stats_t, sp_t, tot_t, rc_t, pt_t, par_t,
+            sib_t, slot_t, fk_t, depth, plan=plan, Lp=Lp,
+            need_partition=need_partition, subtract=subtract,
             fused_tail=False, pre_num=pn, pre_cat=pc)
 
-    in_axes = tuple([None] * 7 + [0] * 8 + [None] + [0] * len(pres))
-    struct, new_leaf_of, _, _, part = jax.vmap(vcore, in_axes=in_axes)(
-        num, cat, labels, sorted_vals, sorted_idx, bin_of, bin_edges,
-        ord_idx, leaf_of, w, stats, splittable_p, totals, row_counts, fkeys,
-        depth, *pres)
+    in_axes = tuple([None] * 7 + [0] * 12 + [None] + [0] * len(pres))
+    struct, new_leaf_of, _, _, part, new_tables = \
+        jax.vmap(vcore, in_axes=in_axes)(
+            num, cat, labels, sorted_vals, sorted_idx, bin_of, bin_edges,
+            ord_idx, leaf_of, w, stats, splittable_p, totals, row_counts,
+            prev_tables, parent_of, sib_of, slot_of, fkeys, depth, *pres)
+    if pre_tables is not None:
+        new_tables = pre_tables
 
     # scatter-backed tail on the FLAT (tree, segment) index space: per-tree
     # results are bit-identical (each tree's rows accumulate in the same
@@ -547,11 +639,12 @@ def _fused_level_step_batched(num, cat, labels, sorted_vals, sorted_idx,
     next_totals = jax.ops.segment_sum(
         jnp.where(inb.reshape(-1)[:, None], stats.reshape(T * n, -1), 0.0),
         flat_ids, num_segments=T * L2).reshape(T, L2, -1)
-    if use_ord:
+    if use_ord or carries:
         key_counts = jax.ops.segment_sum(
             jnp.ones((T * n,), jnp.int32), flat_ids,
             num_segments=T * L2).reshape(T, L2)
         struct = dict(struct, key_counts=key_counts)
+    if use_ord:
         if need_partition:
             bits, new_left, new_right = part
             lf_pos = jax.vmap(lambda lf, oi: lf[oi])(leaf_of, ord_idx[:, 0])
@@ -562,4 +655,4 @@ def _fused_level_step_batched(num, cat, labels, sorted_vals, sorted_idx,
             new_ord_idx = ord_idx
     else:
         new_ord_idx = ord_idx
-    return struct, new_leaf_of, new_ord_idx, next_totals
+    return struct, new_leaf_of, new_ord_idx, next_totals, new_tables

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import splits
-from repro.core.level.engines import SplitEngine
+from repro.core.level.engines import SplitEngine, _expand_subtracted
 
 try:  # jax>=0.6 stable name, fall back to experimental
     from jax import shard_map as _shard_map_mod
@@ -179,58 +179,110 @@ class ShardedHistNumeric(_MeshEngine):
 
     Columns shard over `feature_axis`; ROWS — plain row order, no presorted
     state — shard over `row_axis` together with the class list / bag
-    weights / stats.  Each shard scatter-adds its local per-leaf
-    (bin × stat) count table and a single `psum` merges them: (L+1)·B·S
-    floats per column per level, independent of n — the PLANET-style
-    fixed-size merge vs the exact engine's resumable-scan all_gather.
-    `row_axis=None` gives the column-sharded-only variant (no psum).
-    The bucket count is read off bin_edges, so the engine always agrees
-    with the TreeParams that produced the bucket state.
+    weights / stats.  Each shard builds its local per-leaf (bin × stat)
+    tables for ALL its columns in one flat scatter
+    (`splits.feature_count_tables`, reading only the bit-packed bin cache)
+    and a single `psum` per level merges them — the PLANET-style fixed-size
+    merge vs the exact engine's resumable-scan all_gather.  Under
+    `st.subtract` only the packed BUILD-slot tables cross the network
+    ((ℓ/2+1)·B·S floats per column, ~half the plain payload); each shard
+    then derives every sibling locally as parent − sibling from the
+    replicated-in-spec carried tables.  `row_axis=None` gives the
+    column-sharded-only variant (no psum).  Thresholds are reported as
+    BIN INDICES (`bin_cut_thresholds`), decoded on the host.
     """
 
     needs_bins = True
+    bin_cut_thresholds = True
+    carries_tables = True
 
     def supersplits(self, inp, st, Lp, cand):
-        g, t = self._search(inp.bin_of, inp.bin_edges, inp.leaf_of[None],
-                            inp.w[None], inp.stats[None], cand[None], Lp,
-                            st.impurity, st.task, st.min_records)
-        return g[0], t[0]
+        one = lambda x: None if x is None else x[None]
+        res = self._search(inp.bin_of, one(inp.leaf_of), one(inp.w),
+                           one(inp.stats), one(cand), Lp, st,
+                           one(inp.prev_tables), one(inp.parent_of),
+                           one(inp.sib_of), one(inp.slot_of))
+        return tuple(r[0] for r in res)
 
     def supersplits_batched(self, inp, st, Lp, cand):
-        return self._search(inp.bin_of, inp.bin_edges, inp.leaf_of, inp.w,
-                            inp.stats, cand, Lp, st.impurity, st.task,
-                            st.min_records)
+        return self._search(inp.bin_of, inp.leaf_of, inp.w, inp.stats,
+                            cand, Lp, st, inp.prev_tables, inp.parent_of,
+                            inp.sib_of, inp.slot_of)
 
     def __call__(self, bin_of, bin_edges, leaf_of, w, stats, cand, Lp,
                  impurity, task, min_records):
-        """Legacy per-tree hist supersplit_fn signature."""
-        g, t = self._search(bin_of, bin_edges, leaf_of[None], w[None],
-                            stats[None], cand[None], Lp, impurity, task,
-                            min_records)
-        return g[0], t[0]
+        """Legacy per-tree hist supersplit_fn signature (float thresholds,
+        decoded here from the device-side edges for back-compat)."""
+        from repro.core.level.engines import LevelStatics
+        st = LevelStatics(m_num=bin_of.shape[0], m_cat=0, max_arity=1,
+                          num_classes=stats.shape[-1],
+                          num_bins=bin_edges.shape[-1], impurity=impurity,
+                          task=task, min_records=min_records)
+        g, c = self._search(bin_of, leaf_of[None], w[None], stats[None],
+                            cand[None], Lp, st, None, None, None, None)
+        cuts = c[0].astype(jnp.int32)
+        thr = jnp.take_along_axis(bin_edges, cuts, axis=1)
+        return g[0], jnp.where(jnp.isfinite(g[0]), thr, 0.0)
 
-    def _search(self, bin_of, bin_edges, leaf_of, w, stats, cand, Lp,
-                impurity, task, min_records):
+    def _search(self, bin_of, leaf_of, w, stats, cand, Lp, st,
+                prev_tables, parent_of, sib_of, slot_of):
         F, R = self.feature_axis, self.row_axis
+        B = st.num_bins
+        subtract = st.subtract
+        Wb = Lp // 2 + 1 if subtract else Lp + 1
+        impurity, task, min_records = st.impurity, st.task, st.min_records
 
-        def local(bo, be, cl, lf, ww, stt):
-            def per_tree(cl_t, lf_t, ww_t, st_t):
-                def per_col(b, e, c):
-                    table = splits.categorical_count_table(
-                        b, lf_t, ww_t, st_t, Lp, e.shape[0])
-                    if R is not None:
-                        table = jax.lax.psum(table, R)      # the merge
-                    return splits.best_numeric_split_histogram(
-                        table, e, c, impurity, task, min_records)
-                return jax.vmap(per_col)(bo, be, cl_t)
-            return jax.vmap(per_tree)(cl, lf, ww, stt)
+        def local(bo, cl, lf, ww, stt, *sub):
+            # bo (m_loc, n_loc); cl (T, m_loc, L+1); lf/ww (T, n_loc);
+            # stt (T, n_loc, S); sub = (prev (T, m_loc, Wprev, B, S),
+            # parent/sib/slot (T, L+1)) when subtracting
+            def build(lf_t, ww_t, st_t, slot_t):
+                # NO row compaction here: the build-rows <= n/2 bound is
+                # global, not per row shard — derive rows mask to slot 0
+                ids = slot_t[lf_t] if subtract else lf_t
+                return splits.feature_count_tables(bo, ids, ww_t, st_t,
+                                                   Wb - 1, B)
+            if subtract:
+                prev, par, sib, slot = sub
+                packed = jax.vmap(build)(lf, ww, stt, slot)
+            else:
+                packed = jax.vmap(lambda a, b, c: build(a, b, c, None))(
+                    lf, ww, stt)
+            if R is not None:
+                # THE merge: one psum of the (T, m_loc, Wb, B, S) tables —
+                # under subtraction only build slots cross the network
+                packed = jax.lax.psum(packed, R)
+            if subtract:
+                tables = jax.vmap(
+                    lambda pk, pv, pr, sb, sl:
+                    _expand_subtracted(pk, pv, pr, sb, sl))(
+                        packed, prev, par, sib, slot)
+            else:
+                tables = packed
 
-        sharded = _shmap(
-            local, self.mesh,
-            in_specs=(P(F, R), P(F, None), P(None, F, None),
-                      P(None, R), P(None, R), P(None, R, None)),
-            out_specs=(P(None, F, None), P(None, F, None)))
-        return sharded(bin_of, bin_edges, cand, leaf_of, w, stats)
+            def score(tb_t, cl_t):
+                return jax.vmap(
+                    lambda tb, c: splits.best_numeric_split_histogram(
+                        tb, c, impurity, task, min_records))(tb_t, cl_t)
+            g, cuts = jax.vmap(score)(tables, cl)
+            if st.carry_tables:
+                return g, cuts, tables
+            return g, cuts
+
+        tab_spec = P(None, F, None, None, None)
+        in_specs = [P(F, R), P(None, F, None), P(None, R), P(None, R),
+                    P(None, R, None)]
+        args = [bin_of, cand, leaf_of, w, stats]
+        if subtract:
+            in_specs += [tab_spec, P(None, None), P(None, None),
+                         P(None, None)]
+            args += [prev_tables, parent_of, sib_of, slot_of]
+        out_specs = (P(None, F, None), P(None, F, None))
+        if st.carry_tables:
+            out_specs = out_specs + (tab_spec,)
+        sharded = _shmap(local, self.mesh,
+                         in_specs=tuple(in_specs), out_specs=out_specs)
+        return sharded(*args)
 
 
 # ---------------------------------------------------------------------------

@@ -70,16 +70,31 @@ def quantize_edges(sorted_vals: jnp.ndarray, num_bins: int) -> jnp.ndarray:
     return sorted_vals[:, pos]
 
 
+def bin_dtype(num_bins: int):
+    """The bit-packed bucket-id dtype: bin ids live in [0, num_bins).
+
+    uint8 up to 256 buckets (the PLANET-standard 255-bin budget included),
+    uint16 past that — the bin cache is the ONLY per-row numeric state the
+    hist-mode level program reads (DESIGN.md §6), so packing it is a 4x
+    memory-traffic cut over the old int32 ids (and 4x over re-reading the
+    float32 columns).
+    """
+    return jnp.uint8 if num_bins <= 256 else jnp.uint16
+
+
 @jax.jit
 def bin_columns(num: jnp.ndarray, edges: jnp.ndarray) -> jnp.ndarray:
-    """Bucket id per row per column: (n, m_num) values -> (m_num, n) int32.
+    """Bucket id per row per column: (n, m_num) values -> (m_num, n) packed.
 
     bin_of[j, k] = searchsorted(edges[j, :-1], num[k, j], side="left"), i.e.
     the first bucket whose upper edge is >= the value; values above the
-    column max (unseen at fit time) land in the last bucket.
+    column max (unseen at fit time) land in the last bucket.  The result is
+    bit-packed (`bin_dtype`): uint8 for <= 256 buckets, uint16 beyond.
     """
+    dt = bin_dtype(edges.shape[1])
+
     def per_col(v, e):
-        return jnp.searchsorted(e[:-1], v, side="left").astype(jnp.int32)
+        return jnp.searchsorted(e[:-1], v, side="left").astype(dt)
     return jax.vmap(per_col)(num.T, edges)
 
 
@@ -89,7 +104,11 @@ def quantize(num: jnp.ndarray, sorted_vals: jnp.ndarray,
 
     The one quantization recipe shared by `RandomForest.fit`,
     `GBTModel.fit` and `TabularDataset.quantize`.  Returns
-    (bin_of (m_num, n) int32, edges (m_num, num_bins) float32).
+    (bin_of (m_num, n) uint8/uint16 — see `bin_dtype`,
+    edges (m_num, num_bins) float32).  `bin_of` is the device-resident bin
+    cache every hist level reads; `edges` only decodes winning cut indices
+    back to float thresholds on the HOST (tree.py), so no float32 column
+    traffic remains inside the level program.
     """
     edges = quantize_edges(sorted_vals, num_bins)
     return bin_columns(num, edges), edges

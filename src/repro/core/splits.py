@@ -363,7 +363,6 @@ def best_numeric_split_leaf_ordered(
 
 def best_numeric_split_histogram(
     table: jnp.ndarray,          # (L+1, B, S) per-leaf (bin × stat) table
-    edges: jnp.ndarray,          # (B,) ascending bucket upper edges
     cand_leaf: jnp.ndarray,      # (L+1,) bool
     impurity: str = "gini",
     task: str = "classification",
@@ -375,18 +374,19 @@ def best_numeric_split_histogram(
     (`split_mode="hist"`): the numeric column was quantized once at presort
     time into <= B quantile buckets (presort.quantize_edges), every level
     builds the per-leaf (bin × stat) count `table` with the SAME scatter-add
-    machinery as the categorical path (`categorical_count_table` /
-    the Pallas `cat_hist` kernel with bins as the arity), and this scorer
-    enumerates prefix cuts in bucket order — no reordering, buckets are
-    already value-sorted, which is the only difference from
-    `best_categorical_split_from_table`.
+    machinery as the categorical path (`feature_count_tables` / the Pallas
+    `feat_hist` kernel), and this scorer enumerates prefix cuts in bucket
+    order — no reordering, buckets are already value-sorted, which is the
+    only difference from `best_categorical_split_from_table`.
 
-    A cut after bucket b uses threshold edges[b] (the largest value in the
-    left buckets), so the tree's `x <= thr` condition reproduces the scored
-    partition exactly.  Empty buckets (duplicate edges) give zero-gain
-    duplicate cuts and are never selected over a populated boundary.
-
-    Returns (best_gain (L+1,), best_threshold (L+1,)).
+    Returns (best_gain (L+1,), best_cut (L+1,) float32) — best_cut is the
+    winning BIN INDEX b (a cut keeps bins <= b left), not a float
+    threshold: the level program never touches the float edges (the bin
+    cache is its only per-row numeric input, DESIGN.md §6), and the host
+    decodes `threshold = edges[col, b]` when recording the node, which
+    reproduces the scored partition exactly (`bin <= b  <=>  x <=
+    edges[b]`).  Empty buckets (duplicate edges) give zero-gain duplicate
+    cuts and are never selected over a populated boundary.
     """
     totals = table.sum(1)                                   # (L+1, S)
     cnt = count_fn(task)
@@ -398,8 +398,45 @@ def best_numeric_split_histogram(
     gains = jnp.where(ok, split_gain(left, right, impurity), NEG)  # (L+1, B-1)
     best_cut = jnp.argmax(gains, axis=1)                    # first max
     best_gain = jnp.take_along_axis(gains, best_cut[:, None], axis=1)[:, 0]
-    best_thr = jnp.where(jnp.isfinite(best_gain), edges[best_cut], 0.0)
-    return best_gain, best_thr
+    best_cut = jnp.where(jnp.isfinite(best_gain), best_cut, 0)
+    return best_gain, best_cut.astype(jnp.float32)
+
+
+def feature_count_tables(
+    bin_of: jnp.ndarray,         # (m, n) packed bucket ids (uint8/uint16)
+    leaf_ids: jnp.ndarray,       # (n,) int32 scatter slots, 0 = discard
+    w: jnp.ndarray,              # (n,) float32 bag weights
+    stats: jnp.ndarray,          # (n, S) row stats
+    num_slots: int,              # table width minus one (slots 1..num_slots)
+    num_bins: int,
+) -> jnp.ndarray:
+    """(m, num_slots+1, B, S) per-leaf bin tables for ALL m features in ONE
+    scatter over the flat (feature, slot, bin) index space.
+
+    This is the jnp twin of the Pallas `feat_hist` kernel (kernels/ops
+    .feature_tables): both accumulate each row's stat contribution into
+    every feature's (slot, bin) cell in row order, so the two backends
+    produce the same tables (bit-identical for the integer-valued
+    classification stats).  The single flat segment_sum replaces the old
+    per-column vmap of `categorical_count_table` — one scatter pass over
+    the whole bin cache instead of m dispatched column scatters.
+
+    `leaf_ids` are pre-mapped scatter SLOTS, not necessarily raw leaf ids:
+    the subtraction path (level/engines.py) passes the packed build-leaf
+    slots with derive-leaf rows mapped to the discarded slot 0.
+    """
+    m, n = bin_of.shape
+    W = num_slots + 1
+    inbag = (w > 0) & (leaf_ids > 0)
+    contrib = jnp.where(inbag[:, None], stats, 0.0)          # (n, S)
+    base = leaf_ids.astype(jnp.int32) * num_bins + bin_of.astype(jnp.int32)
+    flat = (jnp.arange(m, dtype=jnp.int32)[:, None] * (W * num_bins)
+            + base)                                          # (m, n)
+    contrib_b = jnp.broadcast_to(contrib[None], (m, n, contrib.shape[-1]))
+    table = jax.ops.segment_sum(contrib_b.reshape(m * n, -1),
+                                flat.reshape(-1),
+                                num_segments=m * W * num_bins)
+    return table.reshape(m, W, num_bins, -1)
 
 
 # ---------------------------------------------------------------------------

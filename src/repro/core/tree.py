@@ -75,6 +75,14 @@ class TreeParams:
     # per-leaf (bin × class) count tables (DESIGN.md §6)
     split_mode: str = "exact"       # exact | hist
     num_bins: int = 255             # histogram-mode bucket budget per column
+    # histogram subtraction (DESIGN.md §6): carry each level's per-leaf
+    # tables and build only the SMALLER child of every split, deriving the
+    # sibling as parent − sibling — ~half the table-build work per level
+    # and, sharded, ~half the psum payload.  Classification only (integer
+    # tables make the subtraction exact; regression always rebuilds
+    # plain); results are bit-identical either way, so this is purely a
+    # perf knob.
+    hist_subtract: bool = True
     usb: bool = False               # unique set of bagged features per depth (§3.2)
     bagging: str = "poisson"        # poisson | multinomial | none
     leaf_pad: int = 8               # pad open-leaf count to multiples (recompile bound)
@@ -145,6 +153,11 @@ class LevelStats:
     class_list_bits: int         # n * ceil(log2(l+1))
     feature_passes: int          # sequential passes over candidate columns
     rows_scanned: int
+    # hist mode: bytes of the per-level merged table payload — exactly
+    # what ShardedHistNumeric psums (m·width·B·S f32); under subtraction
+    # only the packed build slots (width Lp//2+1 vs Lp+1) cross the
+    # network, which is the ~2x payload cut benchmarks/run.py hist records
+    hist_table_bytes: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -172,14 +185,42 @@ def _hist_state(num, sorted_vals, params, m_num, bin_of, bin_edges):
 
     When the caller (RandomForest/GBTModel.fit) did not precompute the
     quantization, derive it here from the presorted values — once per tree
-    build, shared by every level.
+    build, shared by every level.  Pre-quantized state is VALIDATED
+    against `params`: a bin-count or shape disagreement used to be
+    silently ignored (the engines read whatever bucket ids they were
+    handed) and now raises at fit time.
     """
     if params.split_mode == "hist" and m_num:
         if bin_of is None:
             bin_of, bin_edges = presort.quantize(num, sorted_vals,
                                                  params.num_bins)
+        if bin_edges is None:
+            raise ValueError("pre-quantized bin_of needs its bin_edges")
+        if tuple(bin_edges.shape) != (m_num, params.num_bins):
+            raise ValueError(
+                f"pre-quantized bucket state disagrees with TreeParams: "
+                f"bin_edges shape {tuple(bin_edges.shape)} but the fit has "
+                f"m_num={m_num} numeric columns and num_bins="
+                f"{params.num_bins} — re-quantize the dataset (e.g. "
+                f"TabularDataset.quantize(num_bins={params.num_bins})) or "
+                f"set TreeParams(num_bins={bin_edges.shape[-1]})")
+        if (tuple(bin_of.shape)[0] != m_num
+                or bin_of.shape[-1] != num.shape[0]):
+            raise ValueError(
+                f"pre-quantized bin_of shape {tuple(bin_of.shape)} does "
+                f"not match the dataset ((m_num, n) = "
+                f"({m_num}, {num.shape[0]}))")
+        if not jnp.issubdtype(bin_of.dtype, jnp.integer):
+            raise ValueError(f"bin_of must be integer bucket ids, got "
+                             f"dtype {bin_of.dtype}")
+        if np.iinfo(np.dtype(bin_of.dtype)).max < params.num_bins - 1:
+            raise ValueError(
+                f"bin_of dtype {bin_of.dtype} cannot hold num_bins="
+                f"{params.num_bins} bucket ids (expected "
+                f"{np.dtype(presort.bin_dtype(params.num_bins)).name})")
         return bin_of, bin_edges
-    return jnp.zeros((0, 0), jnp.int32), jnp.zeros((0, 0), jnp.float32)
+    return jnp.zeros((0, 0), presort.bin_dtype(params.num_bins)), \
+        jnp.zeros((0, 0), jnp.float32)
 
 
 def _resolve_engines(params, supersplit_fn, engine, cat_engine):
@@ -262,13 +303,19 @@ class _NodeAccum:
 
 
 def _grow_level(acc: _NodeAccum, open_nodes: list, host: dict, L: int,
-                m_num: int, depth: int) -> tuple[list, bool]:
+                m_num: int, depth: int, edges_np=None) -> tuple[list, bool]:
     """Alg. 2 step 8 for ONE tree: grow the flat tree from a level struct.
 
     `host` holds the fetched per-leaf arrays of one tree (best_feat /
     best_gain / thr / mask / will_split, each (Lp+1,)-indexed by leaf id).
     Shared by `build_tree` and `build_forest` so their bookkeeping cannot
     drift.  Returns (next level's open node ids, whether any leaf split).
+
+    `edges_np` ((m_num, B) numpy) is the hist fast path's HOST-side
+    threshold decode table: the level program reports the winning BIN
+    INDEX (the float edges never ride to device, DESIGN.md §6), and the
+    recorded node threshold is `edges[col, cut]` — the same float the old
+    device-side decode produced, so trees are unchanged.
     """
     bf, bg = host["best_feat"], host["best_gain"]
     thr, mask, ws = host["thr"], host["mask"], host["will_split"]
@@ -283,7 +330,10 @@ def _grow_level(acc: _NodeAccum, open_nodes: list, host: dict, L: int,
         acc.feature[node] = j
         acc.gain[node] = float(bg[h])
         if j < m_num:
-            acc.threshold[node] = float(thr[h])
+            if edges_np is not None:
+                acc.threshold[node] = float(edges_np[j, int(thr[h])])
+            else:
+                acc.threshold[node] = float(thr[h])
         else:
             acc.is_cat[node] = True
             acc.cat_mask[node] = mask[h].copy()
@@ -291,6 +341,33 @@ def _grow_level(acc: _NodeAccum, open_nodes: list, host: dict, L: int,
         acc.children[node] = [lc, rc]
         next_open.extend([lc, rc])
     return next_open, any_split
+
+
+def _child_maps(ws, kc, L, Lp_next):
+    """The next level's subtraction maps from this level's split bitmap.
+
+    ws (Lp+1,) bool: which leaves split; kc (2·Lp+1,) int: row counts of
+    the new child leaves (the level struct's key_counts).  Returns
+    (parent_of, sib_of, slot_of), each (Lp_next+1,) int32 indexed by the
+    NEW leaf ids: parent/sibling per child, and the packed build slot —
+    assigned to the SMALLER child of each split (ties: left), 0 for the
+    derive sibling.  Build slots stay <= Lp_next // 2, the packed table
+    width the engines scatter into (build rows are therefore <= n // 2,
+    the compaction bound in level/engines.py).
+    """
+    parent = np.zeros(Lp_next + 1, np.int32)
+    sib = np.zeros(Lp_next + 1, np.int32)
+    slot = np.zeros(Lp_next + 1, np.int32)
+    k = 0
+    for h in range(1, L + 1):
+        if not ws[h]:
+            continue
+        k += 1
+        lc, rc = 2 * k - 1, 2 * k
+        parent[lc] = parent[rc] = h
+        sib[lc], sib[rc] = rc, lc
+        slot[lc if kc[lc] <= kc[rc] else rc] = k
+    return parent, sib, slot
 
 
 def _assemble_tree(acc: _NodeAccum, max_arity, m_num, task) -> Tree:
@@ -379,6 +456,11 @@ def build_tree(
     hist = params.split_mode == "hist"
     bin_of, bin_edges = _hist_state(num, sorted_vals, params, m_num,
                                     bin_of, bin_edges)
+    # hist fast path: float edges stay HOST-side, decoding the reported
+    # bin cuts into node thresholds (the level program reads only the
+    # bit-packed bin cache); `carries` = the subtraction recurrence is on
+    carries = plan.carries_tables
+    edges_np = np.asarray(bin_edges) if plan.use_bin_cuts else None
 
     w = bagging.bag_counts(seed, tree_idx, n, params.bagging)
     stats = splits.row_stats(labels, w, num_classes, task)
@@ -400,6 +482,10 @@ def build_tree(
     # root: all rows in leaf 1, so value order == (leaf, value) order
     ord_idx = sorted_idx if use_ord else jnp.zeros((0, 0), jnp.int32)
 
+    tables = None                   # carried per-leaf hist tables (device)
+    maps_src = None                 # (will_split, key_counts, L) of level-1
+    no_tables = jnp.zeros((0, 0, 0, 0), jnp.float32)
+    no_map = jnp.zeros((0,), jnp.int32)
     totals_np = None
     row_counts_np = None
     for depth in range(params.max_depth + 1):
@@ -434,38 +520,64 @@ def build_tree(
             break
         splittable_p = np.concatenate([[False], splittable])
 
+        # histogram subtraction: relate this frontier to the carried
+        # previous-level tables (maps live on the host — tiny per-leaf
+        # int arrays — and ride up with the other level inputs)
+        subtract = bool(carries and tables is not None
+                        and maps_src is not None)
+        if subtract:
+            parent_np, sib_np, slot_np = _child_maps(*maps_src, Lp)
+            maps_dev = (tables, jnp.asarray(parent_np),
+                        jnp.asarray(sib_np), jnp.asarray(slot_np))
+        else:
+            maps_dev = (no_tables, no_map, no_map, no_map)
+
         # the whole level on device: one dispatch, one small struct back
         _STEP_CALLS[0] += 1
-        struct, leaf_of, ord_idx, next_totals = _fused_level_step(
-            num, cat, labels,
-            _zeros_unless(plan.pass_sorted, sorted_vals, jnp.float32),
-            _zeros_unless(plan.pass_sorted, sorted_idx, jnp.int32),
-            bin_of, bin_edges, ord_idx, leaf_of, w, stats,
-            jnp.asarray(splittable_p), jnp.asarray(totals_np),
-            jnp.asarray(row_counts_np), fkey,
-            jnp.int32(depth), plan=plan, Lp=Lp,
-            need_partition=use_ord and depth + 1 < params.max_depth)
+        struct, leaf_of, ord_idx, next_totals, new_tables = \
+            _fused_level_step(
+                _zeros_unless(plan.pass_num or not hist, num, jnp.float32),
+                cat, labels,
+                _zeros_unless(plan.pass_sorted, sorted_vals, jnp.float32),
+                _zeros_unless(plan.pass_sorted, sorted_idx, jnp.int32),
+                bin_of,
+                _zeros_unless(plan.pass_edges or not hist, bin_edges,
+                              jnp.float32),
+                ord_idx, leaf_of, w, stats,
+                jnp.asarray(splittable_p), jnp.asarray(totals_np),
+                jnp.asarray(row_counts_np), *maps_dev, fkey,
+                jnp.int32(depth), plan=plan, Lp=Lp,
+                need_partition=use_ord and depth + 1 < params.max_depth,
+                subtract=subtract)
+        if carries:
+            tables = new_tables
         # non-blocking D2H of the small per-level struct
         for leaf in jax.tree_util.tree_leaves((struct, next_totals)):
             if hasattr(leaf, "copy_to_host_async"):
                 leaf.copy_to_host_async()
         host, totals_np = jax.device_get((struct, next_totals))
-        if use_ord:
+        if use_ord or carries:
             row_counts_np = host["key_counts"]
+        if carries:
+            maps_src = (host["will_split"], host["key_counts"], L)
 
         # Alg. 2 step 8: the host bookkeeping — grow the flat tree
         next_open, any_split = _grow_level(acc, open_nodes, host, L, m_num,
-                                           depth)
+                                           depth, edges_np=edges_np)
 
         if collect_stats:
             open_w = float(counts[1:L + 1].sum())
+            tbl_w = (Lp // 2 + 1) if subtract else (Lp + 1)
             stats_log.append(LevelStats(
                 depth=depth, open_leaves=L,
                 network_bits_bitmap=int(open_w),
                 network_bits_supersplit=int(m * (Lp + 1) * 64),
                 class_list_bits=class_list.storage_bits(n, L),
                 feature_passes=int(min(m_prime * (1 if params.usb else L), m)),
-                rows_scanned=n * min(m_prime * (1 if params.usb else L), m)))
+                rows_scanned=n * min(m_prime * (1 if params.usb else L), m),
+                hist_table_bytes=(m_num * tbl_w * params.num_bins
+                                  * int(stats.shape[-1]) * 4 if hist
+                                  else 0)))
 
         if not any_split:
             break
@@ -481,7 +593,7 @@ def build_tree(
             # (the last level before max_depth skips the partition; the loop
             # terminates right after, so skipping the prune there is free)
             order_current = not use_ord or (depth + 1 < params.max_depth)
-            closed = (int(row_counts_np[0]) if use_ord
+            closed = (int(row_counts_np[0]) if use_ord or carries
                       else int(jnp.sum(leaf_of == 0)))
             drop = pruning.plan_drop(n, closed, plan.row_shards,
                                      params.prune_closed_frac)
@@ -493,7 +605,7 @@ def build_tree(
                     sorted_vals=sorted_vals, sorted_idx=sorted_idx,
                     bin_of=bin_of, num=num, cat=cat, stats=stats, w=w,
                     labels=labels, use_ord=use_ord, hist=hist, m_num=m_num)
-                if use_ord:
+                if use_ord or carries:
                     row_counts_np = row_counts_np.copy()
                     row_counts_np[0] -= drop   # dropped rows were leaf 0
 
@@ -565,6 +677,8 @@ def build_forest(
     # shared read-only input of the batched step, like the presorted order
     bin_of, bin_edges = _hist_state(num, sorted_vals, params, m_num,
                                     bin_of, bin_edges)
+    carries = plan.carries_tables       # hist subtraction (DESIGN.md §6)
+    edges_np = np.asarray(bin_edges) if plan.use_bin_cuts else None
     tidx = [int(t) for t in tree_indices]
     T = len(tidx)
     assert T >= 1
@@ -574,6 +688,7 @@ def build_forest(
                                   params.bagging)                   # (T, n)
     stats = jax.vmap(
         lambda ww: splits.row_stats(labels, ww, num_classes, task))(w)
+    S_dim = int(stats.shape[-1])
     base_key = jax.random.PRNGKey(seed ^ 0x5EED)
     fkeys = jax.vmap(lambda t: jax.random.fold_in(base_key, t))(
         jnp.asarray(tidx, jnp.int32))
@@ -612,19 +727,24 @@ def build_forest(
                           ("best_feat", "best_gain", "thr", "mask",
                            "will_split")}
                 next_open, any_split = _grow_level(
-                    accs[t], open_nodes[t], host_t, L, m_num, depth_d)
+                    accs[t], open_nodes[t], host_t, L, m_num, depth_d,
+                    edges_np=edges_np)
                 if collect_stats:
                     # per-tree accounting under the tree's OWN padding, so
                     # the counters match a per-tree build of the same tree
                     Lp_t = _pad_leaves(L, params.leaf_pad)
                     open_w = float(counts_d[t, 1:L + 1].sum())
                     passes = int(min(m_prime * (1 if params.usb else L), m))
+                    tbl_w = ((Lp_t // 2 + 1) if carries and depth_d > 0
+                             else (Lp_t + 1))
                     stats_logs[t].append(LevelStats(
                         depth=depth_d, open_leaves=L,
                         network_bits_bitmap=int(open_w),
                         network_bits_supersplit=int(m * (Lp_t + 1) * 64),
                         class_list_bits=class_list.storage_bits(n_d, L),
-                        feature_passes=passes, rows_scanned=n_d * passes))
+                        feature_passes=passes, rows_scanned=n_d * passes,
+                        hist_table_bytes=(m_num * tbl_w * params.num_bins
+                                          * S_dim * 4 if hist else 0)))
                 if any_split:
                     open_nodes[t] = next_open
         return book
@@ -634,6 +754,10 @@ def build_forest(
     Ls = [1] * T                          # current frontier size per tree
     closed_np = 0                         # rows closed in EVERY tree
     pending = None                        # previous level's deferred book()
+    tables = None                         # carried hist tables (device, T)
+    maps_src = None                       # (ws, key_counts, Ls) of level-1
+    no_tables = jnp.zeros((T, 0, 0, 0, 0), jnp.float32)
+    no_map = jnp.zeros((T, 0), jnp.int32)
     for depth in range(params.max_depth + 1):
         if max(Ls) == 0:
             break
@@ -700,23 +824,49 @@ def build_forest(
                     sorted_vals=sorted_vals, sorted_idx=sorted_idx,
                     bin_of=bin_of, num=num, cat=cat, stats=stats, w=w,
                     labels=labels, use_ord=use_ord, hist=hist, m_num=m_num)
-                if use_ord:
+                if use_ord or carries:
                     row_counts_np = row_counts_np.copy()
                     row_counts_np[:, 0] -= drop  # dropped rows were leaf 0
                 closed_np -= drop
 
+        # histogram subtraction: per-tree maps from the previous level's
+        # split bitmap + child row counts (smaller child = build slot)
+        subtract = bool(carries and tables is not None
+                        and maps_src is not None)
+        if subtract:
+            ws_prev, kc_prev, Ls_prev = maps_src
+            parent_b = np.zeros((T, Lp + 1), np.int32)
+            sib_b = np.zeros((T, Lp + 1), np.int32)
+            slot_b = np.zeros((T, Lp + 1), np.int32)
+            for t in range(T):
+                if Ls_prev[t]:
+                    parent_b[t], sib_b[t], slot_b[t] = _child_maps(
+                        ws_prev[t], kc_prev[t], Ls_prev[t], Lp)
+            maps_dev = (tables, jnp.asarray(parent_b), jnp.asarray(sib_b),
+                        jnp.asarray(slot_b))
+        else:
+            maps_dev = (no_tables, no_map, no_map, no_map)
+
         # the whole level of the whole batch on device: ONE dispatch,
         # one stacked struct back
         _BATCH_STEP_CALLS[0] += 1
-        struct, leaf_of, ord_idx, next_totals = _fused_level_step_batched(
-            num, cat, labels,
-            _zeros_unless(plan.pass_sorted, sorted_vals, jnp.float32),
-            _zeros_unless(plan.pass_sorted, sorted_idx, jnp.int32),
-            bin_of, bin_edges, ord_idx, leaf_of, w, stats,
-            jnp.asarray(splittable_p), jnp.asarray(totals_np),
-            jnp.asarray(row_counts_np), fkeys,
-            jnp.int32(depth), plan=plan, Lp=Lp,
-            need_partition=use_ord and depth + 1 < params.max_depth)
+        struct, leaf_of, ord_idx, next_totals, new_tables = \
+            _fused_level_step_batched(
+                _zeros_unless(plan.pass_num or not hist, num, jnp.float32),
+                cat, labels,
+                _zeros_unless(plan.pass_sorted, sorted_vals, jnp.float32),
+                _zeros_unless(plan.pass_sorted, sorted_idx, jnp.int32),
+                bin_of,
+                _zeros_unless(plan.pass_edges or not hist, bin_edges,
+                              jnp.float32),
+                ord_idx, leaf_of, w, stats,
+                jnp.asarray(splittable_p), jnp.asarray(totals_np),
+                jnp.asarray(row_counts_np), *maps_dev, fkeys,
+                jnp.int32(depth), plan=plan, Lp=Lp,
+                need_partition=use_ord and depth + 1 < params.max_depth,
+                subtract=subtract)
+        if carries:
+            tables = new_tables
 
         # pipeline: start the D2H transfer, run the PREVIOUS level's host
         # bookkeeping while the device executes this level, then block
@@ -729,8 +879,10 @@ def build_forest(
 
         totals_cur = totals_np            # this level's totals, for values
         host, totals_np = jax.device_get((struct, next_totals))
-        if use_ord:
+        if use_ord or carries:
             row_counts_np = host["key_counts"]
+        if carries:
+            maps_src = (host["will_split"], host["key_counts"], list(Ls))
         closed_np = int(host["closed_rows"])
 
         # next frontier sizes need only the split bitmap — the rest of the

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel for multi-feature histogram tables (DESIGN.md §6).
+
+`split_mode="hist"` builds, per depth level, a per-leaf (bin × stat) count
+table for EVERY drawn numeric candidate column.  The `cat_hist` kernel
+(which this generalizes) puts the feature index on the grid, so every
+feature re-reads the shared per-row state (leaf ids, bag weights, labels)
+— m× redundant HBM traffic for state that is identical across features.
+This kernel instead makes ONE pass over the row blocks: the per-row state
+and its stat contributions are loaded/computed once per block, and an
+inner loop over features accumulates each feature's one-hot transpose
+matmul (L1·Bv, Bn) @ (Bn, S) into a per-feature VMEM scratch slice.
+
+The bin cache arrives BIT-PACKED (uint8 for <= 256 buckets, uint16 past —
+presort.bin_dtype), so the per-feature traffic is 1 byte per row instead
+of the 4 of the float32 column the exact engines read.  Like `cat_hist`,
+deep tables are tiled over a bucket-block grid dimension Bv so the VMEM
+scratch never exceeds m·L1·Bv·S floats; the histogram-subtraction path
+(level/engines.py) halves L1 by packing build leaves, which doubles the
+admissible Bv.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.cat_hist import _row_stats
+
+
+def _feat_hist_kernel(x_ref, leaf_ref, w_ref, y_ref, out_ref, acc_scr, *,
+                      m, L1, bv, bn, nblocks, s_dim, task):
+    vb = pl.program_id(0)
+    jb = pl.program_id(1)
+
+    @pl.when(jb == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros((m * L1 * bv, s_dim), jnp.float32)
+
+    # shared per-row state: read and reduced ONCE per row block, reused by
+    # every feature (the cat_hist kernel re-reads these per feature)
+    leaf = leaf_ref[0, :].astype(jnp.int32)                   # (Bn,)
+    w = w_ref[0, :]
+    y = y_ref[0, :]
+    stats = _row_stats(y, w, s_dim, task)                     # (Bn, S)
+    inbag0 = (w > 0) & (leaf > 0)
+    v0 = vb * bv
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (bn, L1 * bv), 1)
+
+    def per_feature(f, carry):
+        x = pl.load(x_ref, (pl.ds(f, 1), slice(None)))[0].astype(jnp.int32)
+        in_range = (x >= v0) & (x < v0 + bv)
+        inbag = inbag0 & in_range
+        comb = leaf * bv + jnp.clip(x - v0, 0, bv - 1)        # (Bn,)
+        onehot = ((lanes == comb[:, None])
+                  & inbag[:, None]).astype(jnp.float32)
+        st = stats * inbag[:, None].astype(jnp.float32)
+        upd = jax.lax.dot(onehot.T, st,
+                          precision=jax.lax.Precision.HIGHEST)
+        rows = pl.ds(f * (L1 * bv), L1 * bv)
+        cur = pl.load(acc_scr, (rows, slice(None)))
+        pl.store(acc_scr, (rows, slice(None)), cur + upd)
+        return carry
+
+    jax.lax.fori_loop(0, m, per_feature, 0)
+
+    @pl.when(jb == nblocks - 1)
+    def _emit():
+        out_ref[...] = acc_scr[...].reshape(m, L1, bv, s_dim)
+
+
+def default_bv(V: int, L1: int, m: int) -> int:
+    """Bucket-block size keeping the VMEM scratch under ~m·L1·bv = 32k
+    floats per stat lane (the whole-feature-set analogue of cat_hist's
+    per-feature bound)."""
+    return min(V, max(1, (1 << 15) // max(1, L1 * max(m, 1))))
+
+
+@functools.partial(jax.jit, static_argnames=("L1", "V", "s_dim", "bv", "bn",
+                                             "task", "interpret"))
+def feat_hist_pallas(x, leaf, w, y, *, L1, V, s_dim, bv=None, bn=256,
+                     task="classification", interpret=True):
+    """Histogram tables (m, L1, V, S) for ALL m features in one row pass.
+
+    x: (m, n) packed bucket ids (uint8/uint16); leaf/w/y: (n,) — shared
+    across features, NOT pre-broadcast.  V must be a multiple of bv and n
+    of bn; `kernels.ops.feature_tables` pads both for arbitrary shapes.
+    `leaf` entries are scatter SLOTS (0 = discard): the subtraction path
+    passes packed build-leaf slots, the plain path raw leaf ids.
+    """
+    m, n = x.shape
+    bv = bv or default_bv(V, L1, m)
+    assert n % bn == 0 and V % bv == 0
+    grid = (V // bv, n // bn)
+    kernel = functools.partial(_feat_hist_kernel, m=m, L1=L1, bv=bv, bn=bn,
+                               nblocks=n // bn, s_dim=s_dim, task=task)
+    row_spec = pl.BlockSpec((1, bn), lambda v, j: (0, j))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((m, bn), lambda v, j: (0, j)),
+                  row_spec, row_spec, row_spec],
+        out_specs=pl.BlockSpec((m, L1, bv, s_dim), lambda v, j: (0, 0, v, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, L1, V, s_dim), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((m * L1 * bv, s_dim), jnp.float32)],
+        interpret=interpret,
+    )(x, leaf[None], w[None], y[None])

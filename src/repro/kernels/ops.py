@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import splits
-from repro.kernels import cat_hist, split_scan
+from repro.kernels import cat_hist, feat_hist, split_scan
 
 
 def _on_tpu() -> bool:
@@ -171,3 +171,43 @@ def categorical_tables(cat_cols, leaf_of, w, labels, *, V, Lp,
         cat_cols, leaf_b, w_b, y_b, L1=Lp + 1, V=Vp, s_dim=s_dim, bv=bv,
         bn=bn, task=task, interpret=interpret)
     return tables[:, :, :V, :] if Vp != V else tables
+
+
+def feature_tables(bin_of, leaf_ids, w, labels, *, B, W,
+                   task="classification", bn=256, bv=None, interpret=None,
+                   num_classes=None):
+    """Histogram tables (m, W, B, S) for ALL features in ONE pass over the
+    row blocks, via the Pallas `feat_hist` kernel.
+
+    bin_of: (m, n) bit-packed bucket ids; leaf_ids: (n,) scatter slots
+    (0 = discard; raw leaf ids on the plain path, packed build slots on
+    the subtraction path — see level/engines.py); W = slot-axis width.
+    The jnp twin is `splits.feature_count_tables` (one flat segment_sum)
+    — same accumulation order, so backends agree (bit-identically for the
+    integer classification stats).  Arbitrary B is supported by padding
+    the bucket axis to the kernel's bucket block `bv` and slicing back.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    m, n = bin_of.shape
+    s_dim = _stat_dim(labels, num_classes, task)
+    if interpret:
+        # bound the unrolled row-block count (body work per block is
+        # linear in bn — the per-feature one-hot matmuls — so growing the
+        # block never gates)
+        bn, _, _ = _interpret_grid_plan(n, bn)
+    bv = bv or feat_hist.default_bv(B, W, m)
+    Bp = B + (-B) % bv
+    pad = _pad_rows(n, bn)
+    leaf = leaf_ids.astype(jnp.int32)
+    wv = w
+    y = labels.astype(jnp.float32)
+    if pad:
+        bin_of = jnp.pad(bin_of, ((0, 0), (0, pad)))   # bin 0, but leaf 0 =
+        leaf = jnp.pad(leaf, (0, pad))                 # discarded anyway
+        wv = jnp.pad(wv, (0, pad))                     # w 0 = skipped
+        y = jnp.pad(y, (0, pad))
+    tables = feat_hist.feat_hist_pallas(
+        bin_of, leaf, wv, y, L1=W, V=Bp, s_dim=s_dim, bv=bv, bn=bn,
+        task=task, interpret=interpret)
+    return tables[:, :, :B, :] if Bp != B else tables

@@ -1,6 +1,14 @@
-"""Serving: prefill + decode steps and a batched request engine.
+"""Serving: the forest inference server + the LM prefill/decode engine.
 
-Two KV-cache sharding recipes (DESIGN.md §5):
+`ForestServer` is the ROADMAP "serving export path" wire-up: a long-lived
+process loads ONE versioned `PackedForest` .npz (`forest.PackedForest.save`)
+and serves `predict` off the stacked arrays — the jitted whole-forest
+descent is compiled ONCE at `load` time by a warm-up call, so the first
+real request pays no trace.  `benchmarks/run.py serve` records the p50
+single-row latency of exactly this path.
+
+The LM half (prefill + decode steps and a batched request engine) keeps
+two KV-cache sharding recipes (DESIGN.md §5):
   * "batch"  — batch over "data", kv-heads over "model" (decode_32k, B=128)
   * "seq"    — cache sequence over "data" (flash-decoding-style partial
                softmax combine left to XLA SPMD), heads over "model"
@@ -16,6 +24,72 @@ import jax.numpy as jnp
 
 from repro.models import transformer
 from repro.train import sharding as shd
+
+
+# ---------------------------------------------------------------------------
+# Forest serving (ROADMAP "Serving export path" follow-up)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ForestServer:
+    """Low-latency inference server over an exported `PackedForest`.
+
+    Usage:
+        srv = ForestServer.load("model.npz")    # load + warm the jit
+        probs = srv.predict(num_row, cat_row)   # (B, C), no first-call jit
+
+    `load` deserializes the versioned .npz (no pickle, no training code)
+    and immediately runs one dummy batch through `predict_proba` per
+    common batch size so the descent program is compiled before traffic
+    arrives.  Single-row latency is the serving-critical number
+    (`benchmarks/run.py serve` measures its p50 on this exact class).
+    """
+
+    packed: object                      # forest.PackedForest
+    m_cat: int = 0
+
+    @classmethod
+    def load(cls, path, m_cat: int = 0,
+             warm_batch_sizes=(1,)) -> "ForestServer":
+        """Load an exported forest and pre-compile the descent.
+
+        `m_cat` is the categorical input width requests will carry (the
+        .npz stores only the model; 0 for all-numeric forests).
+        `warm_batch_sizes` picks which request shapes are traced at
+        startup (the descent retraces per batch size — warm every size
+        the service will see; 1 covers the single-row latency path).
+        """
+        from repro.core.forest import PackedForest
+        packed = PackedForest.load(path)
+        srv = cls(packed=packed, m_cat=int(m_cat))
+        if srv._needs_cat() and srv.m_cat == 0:
+            raise ValueError(
+                "this forest splits on categorical features but the "
+                "server was loaded with m_cat=0 — pass the dataset's "
+                "categorical column count to ForestServer.load(path, "
+                "m_cat=...) so requests carry the categorical row")
+        for b in warm_batch_sizes:
+            num = jnp.zeros((b, packed.m_num), jnp.float32)
+            cat = jnp.zeros((b, srv.m_cat), jnp.int32)
+            jax.block_until_ready(packed.predict_proba(num, cat))
+        return srv
+
+    def _needs_cat(self) -> bool:
+        import numpy as np
+        return bool(np.asarray(self.packed.is_cat).any())
+
+    def predict(self, num, cat=None):
+        """(B, C) forest-mean distributions; ONE jitted call."""
+        num = jnp.asarray(num, jnp.float32)
+        if cat is None:
+            if self.m_cat:
+                raise ValueError(
+                    f"this server was loaded with m_cat={self.m_cat}: "
+                    "every request must carry a (B, m_cat) categorical "
+                    "array (an empty one would silently route every "
+                    "categorical split by category 0)")
+            cat = jnp.zeros((num.shape[0], 0), jnp.int32)
+        return self.packed.predict_proba(num, jnp.asarray(cat, jnp.int32))
 
 
 def prefill_step(params, inputs, cfg, unroll: bool = False):

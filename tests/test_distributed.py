@@ -163,6 +163,47 @@ def test_sharded_batched_forest_exact_and_hist():
 
 
 @pytest.mark.slow
+def test_sharded_hist_subtraction_bit_identical():
+    """ISSUE 5 tentpole on the 2x4 mesh: ShardedHistNumeric with histogram
+    subtraction (packed build-slot tables psum'd, siblings derived as
+    parent − sibling) must equal BOTH its own plain rebuild and the local
+    builder node-for-node, batched and per-tree, with prune_closed_frac
+    on — pruning renumbers rows, not leaves, so the carried tables
+    survive row compaction under the mesh too."""
+    print(_run("""
+        import dataclasses
+        import numpy as np
+        from repro.core import distributed, tree as tree_lib
+        from repro.core.dataset import from_numpy
+        from repro.core.forest import RandomForest
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(2, 4)
+        rng = np.random.default_rng(5)
+        n = 2048
+        num = rng.normal(size=(n, 8)).astype(np.float32)
+        y = ((num[:, 0] > 0.8) | (num[:, 1] * num[:, 2] > 1.0)).astype(np.int32)
+        ds = from_numpy(num, None, y)
+        p = tree_lib.TreeParams(max_depth=6, min_records=20, leaf_pad=8,
+                                split_mode='hist', num_bins=32,
+                                prune_closed_frac=0.3)
+        eng = distributed.make_hist_sharded_supersplit(mesh)
+        def fingerprint(rf):
+            return [(t.num_nodes, t.feature.tolist(), t.threshold.tolist(),
+                     t.value.tolist()) for t in rf.trees]
+        local = RandomForest(p, num_trees=4, seed=11, tree_batch=4).fit(ds)
+        for tb in (4, 1):
+            sub = RandomForest(p, num_trees=4, seed=11,
+                               tree_batch=tb).fit(ds, engine=eng)
+            plain = RandomForest(
+                dataclasses.replace(p, hist_subtract=False), num_trees=4,
+                seed=11, tree_batch=tb).fit(ds, engine=eng)
+            assert fingerprint(sub) == fingerprint(plain), tb
+            assert fingerprint(sub) == fingerprint(local), tb
+        print('SHARDED-HIST-SUBTRACT-OK')
+    """))
+
+
+@pytest.mark.slow
 def test_sharded_pruning_through_batched_builder():
     """prune_closed_frac under the mesh: the batched driver drops only
     common-closed rows rounded to the row-shard width, so shard_map

@@ -73,7 +73,7 @@ def test_hist_scorer_matches_numpy_bruteforce():
     edges = np.sort(rng.normal(size=B)).astype(np.float32)
     cand = np.array([False] + [True] * L)
     g, t = splits.best_numeric_split_histogram(
-        jnp.asarray(table), jnp.asarray(edges), jnp.asarray(cand))
+        jnp.asarray(table), jnp.asarray(cand))
     g, t = np.asarray(g), np.asarray(t)
     tb = table.astype(np.float64)
     for h in range(1, L + 1):
@@ -93,7 +93,8 @@ def test_hist_scorer_matches_numpy_bruteforce():
             continue
         np.testing.assert_allclose(g[h], best_g, rtol=1e-5, atol=1e-5,
                                    err_msg=f"leaf{h}")
-        assert t[h] == edges[best_b], f"leaf{h}"
+        # the scorer reports the BIN INDEX; the host decodes edges[cut]
+        assert edges[int(t[h])] == edges[best_b], f"leaf{h}"
 
 
 def test_hist_equals_exact_when_bins_cover_every_value():
@@ -115,10 +116,13 @@ def test_hist_equals_exact_when_bins_cover_every_value():
     edges = presort.quantize_edges(sv, n)          # every row its own bucket
     bin_of = presort.bin_columns(jnp.asarray(num), edges)
     for j in range(2):
-        g_h, t_h = splits.best_numeric_split_histogram(
+        g_h, cut_h = splits.best_numeric_split_histogram(
             splits.categorical_count_table(
-                bin_of[j], jnp.asarray(leaf), jnp.asarray(w), stats, L, n),
-            edges[j], jnp.asarray(cand[j]))
+                bin_of[j].astype(jnp.int32), jnp.asarray(leaf),
+                jnp.asarray(w), stats, L, n),
+            jnp.asarray(cand[j]))
+        t_h = jnp.where(jnp.isfinite(g_h),
+                        edges[j][cut_h.astype(jnp.int32)], 0.0)
         g_e, _ = splits.best_numeric_split_segment(
             sv[j], jnp.asarray(leaf)[si[j]], jnp.asarray(w)[si[j]],
             stats[si[j]], jnp.asarray(cand[j]), L)

@@ -1,0 +1,27 @@
+"""Multi-host (jax.distributed) smoke run — ROADMAP follow-up.
+
+Boots N local processes into one jax.distributed cluster and trains a
+tiny sharded-hist forest through `build_forest` in each, asserting
+equality with the single-process result and cross-process agreement (see
+repro/launch/multihost_smoke.py for the global-mesh vs local-mesh modes —
+the CPU backend has no cross-process collectives, so CI proves boot +
+determinism and TPU/GPU boxes prove the cross-process psum too).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.mark.slow
+def test_multihost_smoke_two_processes():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.multihost_smoke", "--nproc",
+         "2"],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-2000:])
+    assert "multihost smoke: 2 processes OK" in out.stdout, out.stdout
