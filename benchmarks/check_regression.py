@@ -43,22 +43,24 @@ def _collect_smoke_metrics(tmpdir) -> dict:
     import unittest.mock
 
     from benchmarks import (dist_batch_bench, forest_batch_bench,
-                            hist_mode_bench)
-    mods = (forest_batch_bench, hist_mode_bench, dist_batch_bench)
+                            hist_mode_bench, outofcore_bench)
+    mods = (forest_batch_bench, hist_mode_bench, dist_batch_bench,
+            outofcore_bench)
     with contextlib.ExitStack() as stack:
         for mod in mods:           # LIFO: these run LAST, after the env
             stack.callback(importlib.reload, mod)   # restore below
         stack.enter_context(unittest.mock.patch.dict(os.environ, {
             "BENCH_FOREST_BATCH_JSON": os.path.join(tmpdir, "forest.json"),
             "BENCH_HIST_MODE_JSON": os.path.join(tmpdir, "hist.json"),
-            "BENCH_DIST_BATCH_JSON": os.path.join(tmpdir, "dist.json")}))
+            "BENCH_DIST_BATCH_JSON": os.path.join(tmpdir, "dist.json"),
+            "BENCH_OUTOFCORE_JSON": os.path.join(tmpdir, "outofcore.json")}))
         for mod in mods:
             importlib.reload(mod)                   # pick up the overrides
         return _run_smoke_benches(*mods)
 
 
 def _run_smoke_benches(forest_batch_bench, hist_mode_bench,
-                       dist_batch_bench) -> dict:
+                       dist_batch_bench, outofcore_bench) -> dict:
     metrics: dict = {}
     forest = forest_batch_bench.run(smoke=True)
     for p in forest["points"]:
@@ -80,6 +82,14 @@ def _run_smoke_benches(forest_batch_bench, hist_mode_bench,
         metrics[f"dist/{c['mode']}/batched_s"] = c["batched_s"]
         metrics[f"programs::dist/{c['mode']}/batched"] = \
             c["level_programs_batched"]
+    ooc = outofcore_bench.run(smoke=True)
+    for p in ooc["points"]:
+        metrics[f"outofcore/fit_s/n{p['n']}"] = p["fit_s"]
+        metrics[f"outofcore/build_s/n{p['n']}"] = p["build_s"]
+        # dispatch count is structural: a retrace-per-chunk bug would
+        # not change it, but a lost accumulation loop would
+        metrics[f"programs::outofcore/chunks/n{p['n']}"] = \
+            p["chunk_programs"]
     return metrics
 
 

@@ -24,7 +24,8 @@ def main() -> None:
     from benchmarks import (dist_batch_bench, fig1_auc_scaling,
                             fig2_time_scaling, fig3_depth_metrics,
                             forest_batch_bench, hist_mode_bench,
-                            kernel_bench, level_step_bench, serve_bench,
+                            kernel_bench, level_step_bench,
+                            outofcore_bench, serve_bench,
                             table1_complexity)
     args = [a for a in sys.argv[1:] if not a.startswith("--")]
     flags = {a for a in sys.argv[1:] if a.startswith("--")}
@@ -57,6 +58,9 @@ def main() -> None:
         # writes BENCH_serve.json (ForestServer.load + p50 single-row
         # predict latency off the warm packed-forest descent)
         "serve": lambda: serve_bench.run(smoke=smoke),
+        # writes BENCH_outofcore.json (streamed fit from a disk-backed
+        # bin cache: rows/sec vs n, target n >= 20M); honours --smoke
+        "outofcore": lambda: outofcore_bench.run(smoke=smoke),
     }
     if only and only not in benches:
         raise SystemExit(f"unknown benchmark {only!r} "

@@ -49,7 +49,7 @@ class TabularDataset:
         assert self.num.shape[0] == self.cat.shape[0] == self.labels.shape[0]
         assert len(self.arities) == self.m_cat
         if self.task == "classification":
-            assert self.labels.dtype in (jnp.int32, jnp.int64)
+            assert jnp.issubdtype(self.labels.dtype, jnp.integer)
 
     def quantize(self, num_bins: int) -> tuple[jnp.ndarray, jnp.ndarray]:
         """PLANET-style threshold buckets for `split_mode="hist"`.
@@ -91,10 +91,169 @@ def from_numpy(
     else:
         labels = np.asarray(labels, np.float32)
         num_classes = 0
+    # Columns stay HOST numpy here: `jnp.asarray` on a memory-mapped array
+    # would fault the whole file into device memory, defeating mmap inputs.
+    # The fit entry points (`tree.build_tree`/`build_forest`) device-put
+    # once when training actually starts, and `RowSource` backends slice
+    # host blocks without ever materializing n rows on device.
     ds = TabularDataset(
-        num=jnp.asarray(num), cat=jnp.asarray(cat), labels=jnp.asarray(labels),
+        num=num, cat=cat, labels=labels,
         arities=tuple(int(a) for a in arities), num_classes=max(num_classes, 2),
         task=task,
     )
     ds.validate()
     return ds
+
+
+# ---------------------------------------------------------------------------
+# Out-of-core row streams (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+#
+# After PR 5 the bit-packed bin cache is the ONLY per-row numeric state a
+# hist level program reads, so training can stream fixed-shape row blocks
+# of (bins, labels, weights, leaf-ids) through the accumulator instead of
+# holding (m_num, n) on device.  A `RowSource` owns the host-resident
+# pieces of that state — the bin cache (in memory or memory-mapped on
+# disk), the int32 labels, and the decoded float32 edges — and hands out
+# contiguous column blocks; the streamed driver
+# (`tree.build_forest_streamed`) owns weights and leaf ids.
+
+class RowSource:
+    """Host-resident binned rows for streamed hist training.
+
+    Concrete backends provide `bins_block(lo, hi)` (contiguous slice) and
+    `bins_take(idx)` (gather, used after host-side pruning compacts the
+    active row set).  Only hist mode streams: exact mode needs the full
+    presort ("exact needs the presort; only hist streams" — the fit entry
+    points enforce this)."""
+
+    def __init__(self, edges: np.ndarray, labels: np.ndarray, *,
+                 num_classes: int, task: str = "classification",
+                 chunk_size: int = 1 << 16):
+        self.edges = np.ascontiguousarray(edges, np.float32)   # (m_num, B)
+        self.labels = np.ascontiguousarray(labels)             # (n,) host
+        self.num_classes = int(num_classes)
+        self.task = task
+        self.chunk_size = int(chunk_size)
+        assert self.chunk_size >= 1
+
+    @property
+    def n(self) -> int:
+        return int(self.labels.shape[0])
+
+    @property
+    def m_num(self) -> int:
+        return int(self.edges.shape[0])
+
+    @property
+    def num_bins(self) -> int:
+        return int(self.edges.shape[1])
+
+    def bins_block(self, lo: int, hi: int) -> np.ndarray:
+        """Contiguous bin-cache block: (m_num, hi-lo) packed host array."""
+        raise NotImplementedError
+
+    def bins_take(self, idx: np.ndarray) -> np.ndarray:
+        """Gathered bin-cache block for row indices idx: (m_num, len(idx))."""
+        raise NotImplementedError
+
+
+class ArrayRowSource(RowSource):
+    """RowSource over an in-memory (m_num, n) bin cache."""
+
+    def __init__(self, bins: np.ndarray, edges: np.ndarray,
+                 labels: np.ndarray, **kw):
+        super().__init__(edges, labels, **kw)
+        self.bins = np.ascontiguousarray(bins)
+        assert self.bins.shape == (self.m_num, self.n)
+
+    @classmethod
+    def from_dataset(cls, ds: TabularDataset, num_bins: int,
+                     chunk_size: int | None = None) -> "ArrayRowSource":
+        """Quantize a numeric-only dataset into a streamable source.
+
+        Uses the same `TabularDataset.quantize` recipe as the in-memory
+        fit, so the edges (and therefore every downstream decision) are
+        bit-equal to `RandomForest.fit(ds)` in hist mode."""
+        assert ds.m_cat == 0, "streaming sources are numeric-only"
+        bins, edges = ds.quantize(num_bins)
+        kw = {} if chunk_size is None else {"chunk_size": chunk_size}
+        return cls(np.asarray(bins), np.asarray(edges), np.asarray(ds.labels),
+                   num_classes=ds.num_classes, task=ds.task, **kw)
+
+    def bins_block(self, lo: int, hi: int) -> np.ndarray:
+        return self.bins[:, lo:hi]
+
+    def bins_take(self, idx: np.ndarray) -> np.ndarray:
+        return self.bins[:, idx]
+
+
+class MemmapRowSource(RowSource):
+    """RowSource over an on-disk bin cache (.npy, row-major (n, m_num)).
+
+    The cache is stored ROW-major so a chunk of rows is one contiguous
+    file range — `bins_block` reads [lo:hi) and transposes to the
+    (m_num, c) layout the level program consumes.  Built from a chunked
+    float stream by `build` (3 radix-select passes for the edges + 1
+    binning pass), so no full float32 column ever exists in memory."""
+
+    def __init__(self, path: str, edges: np.ndarray, labels: np.ndarray, **kw):
+        super().__init__(edges, labels, **kw)
+        self.path = str(path)
+        self._mm = None
+
+    def _cache(self) -> np.ndarray:
+        if self._mm is None:
+            self._mm = np.load(self.path, mmap_mode="r")
+            assert self._mm.shape == (self.n, self.m_num)
+        return self._mm
+
+    def bins_block(self, lo: int, hi: int) -> np.ndarray:
+        return np.ascontiguousarray(self._cache()[lo:hi].T)
+
+    def bins_take(self, idx: np.ndarray) -> np.ndarray:
+        return np.ascontiguousarray(self._cache()[idx].T)
+
+    @classmethod
+    def build(cls, chunks, n: int, labels: np.ndarray, *, num_bins: int,
+              path: str, num_classes: int | None = None,
+              task: str = "classification",
+              chunk_size: int = 1 << 16) -> "MemmapRowSource":
+        """Quantize + bin a chunked float stream straight to disk.
+
+        `chunks` is a re-iterable callable yielding (c, m_num) float32 row
+        blocks in row order (called 4 times: 3 edge-finding passes + 1
+        binning pass).  Peak memory is one block + O(m_num · num_bins)."""
+        from repro.core import presort
+        first = next(iter(chunks()))
+        m_num = int(first.shape[1])
+        edges = presort.streaming_quantile_edges(chunks, n, m_num, num_bins)
+        mm = np.lib.format.open_memmap(
+            path, mode="w+", shape=(n, m_num),
+            dtype=np.uint8 if num_bins <= 256 else np.uint16)
+        lo = 0
+        for block in chunks():
+            c = block.shape[0]
+            mm[lo:lo + c] = presort.bin_block(block, edges).T
+            lo += c
+        assert lo == n, f"chunk stream covered {lo} rows, expected {n}"
+        mm.flush()
+        del mm
+        labels = np.asarray(labels)
+        if num_classes is None:
+            num_classes = int(labels.max()) + 1 if task == "classification" else 0
+        return cls(path, edges, labels, num_classes=max(num_classes, 2),
+                   task=task, chunk_size=chunk_size)
+
+    @classmethod
+    def from_numpy(cls, num: np.ndarray, labels: np.ndarray, *,
+                   num_bins: int, path: str,
+                   chunk_size: int = 1 << 16, **kw) -> "MemmapRowSource":
+        """`build` over an existing (possibly memory-mapped) (n, m_num) array."""
+        n = int(num.shape[0])
+
+        def chunks():
+            for lo in range(0, n, chunk_size):
+                yield np.asarray(num[lo:lo + chunk_size], np.float32)
+        return cls.build(chunks, n, labels, num_bins=num_bins, path=path,
+                         chunk_size=chunk_size, **kw)

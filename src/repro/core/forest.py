@@ -258,6 +258,12 @@ class RandomForest:
         instead to keep tree batching.  Trees are identical either way,
         only the dispatch count changes.
         """
+        from repro.core.dataset import RowSource
+        if isinstance(ds, RowSource):
+            raise TypeError(
+                "fit() trains from a fully materialized TabularDataset; "
+                "for a RowSource (out-of-core bin cache) use "
+                "fit_streamed(source)")
         ds.validate()
         self.num_classes = ds.num_classes
         self.m, self.m_num = ds.m, ds.m_num
@@ -312,6 +318,42 @@ class RandomForest:
                 self.trees.append(tr)
                 self.level_stats.append(stats)
         self.packed = pack_trees(self.trees)      # stacked inference arrays
+        return self
+
+    def fit_streamed(self, source, collect_stats: bool = False,
+                     engine=None) -> "RandomForest":
+        """Train the forest out-of-core from a `dataset.RowSource`.
+
+        Same trees as `fit` on the equivalently quantized in-memory
+        dataset (bit-identical node for node, tests/test_stream_parity.py)
+        but the per-row state stays host-resident — the level programs see
+        only fixed-shape chunks of the bit-packed bin cache, so peak
+        device memory is bounded by `source.chunk_size`, not n.  Hist
+        split mode + classification + numeric columns only (the
+        `tree.build_forest_streamed` restrictions)."""
+        from repro.core.dataset import RowSource, TabularDataset
+        if isinstance(source, TabularDataset):
+            raise TypeError(
+                "fit_streamed() trains from a RowSource; wrap the dataset "
+                "with ArrayRowSource.from_dataset(ds, num_bins) (or use "
+                "plain fit(ds))")
+        if not isinstance(source, RowSource):
+            raise TypeError(f"expected a dataset.RowSource, got "
+                            f"{type(source).__name__}")
+        self.num_classes = source.num_classes
+        self.m = self.m_num = source.m_num
+        tb = (max(1, min(int(self.tree_batch), self.num_trees))
+              if self.tree_batch is not None else min(self.num_trees, 16))
+        self.trees, self.level_stats = [], []
+        for lo in range(0, self.num_trees, tb):
+            trees, stats = tree_lib.build_forest_streamed(
+                source=source,
+                tree_indices=range(lo, min(lo + tb, self.num_trees)),
+                params=self.params, seed=self.seed,
+                collect_stats=collect_stats, engine=engine)
+            self.trees.extend(trees)
+            self.level_stats.extend(stats)
+        self.packed = pack_trees(self.trees)
         return self
 
     # ------------------------------------------------------------------

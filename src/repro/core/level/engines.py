@@ -119,6 +119,33 @@ class SplitEngine:
         """Row-shard count the driver must keep n divisible by (pruning)."""
         return 1
 
+    # -- out-of-core streaming (DESIGN.md §8) -------------------------------
+    #
+    # A streaming-capable hist engine splits its table build into a
+    # chunk recurrence: `stream_init` allocates the per-level accumulator,
+    # `stream_accumulate` adds one fixed-shape row chunk (called inside
+    # the jitted chunk step, once per chunk), and `stream_finalize` merges
+    # the accumulator into the (T, m_num, L+1, B, S) tables the scorer
+    # reads (called once per level).  Classification tables are
+    # integer-valued f32, so chunked accumulation is bit-equal to the
+    # single-pass scatter regardless of chunk boundaries.
+
+    supports_stream: bool = False
+
+    def stream_init(self, T: int, st: LevelStatics, Lp: int):
+        """Zero accumulator for one level of T trees."""
+        raise NotImplementedError
+
+    def stream_accumulate(self, acc, bins, leaf, w, stats, labels,
+                          st: LevelStatics, Lp: int):
+        """acc + tables of one chunk: bins (m, c); leaf/w (T, c);
+        stats (T, c, S); labels (c,)."""
+        raise NotImplementedError
+
+    def stream_finalize(self, acc):
+        """Accumulator -> merged (T, m_num, Lp+1, B, S) tables."""
+        raise NotImplementedError
+
 
 # ---------------------------------------------------------------------------
 # Shared per-column helpers (also used by the sharded engines)
@@ -266,6 +293,19 @@ class HistNumeric(SplitEngine):
     needs_bins = True
     bin_cut_thresholds = True
     carries_tables = True
+    supports_stream = True
+
+    def stream_init(self, T, st, Lp):
+        S = st.num_classes if st.task == "classification" else 3
+        return jnp.zeros((T, st.m_num, Lp + 1, st.num_bins, S), jnp.float32)
+
+    def stream_accumulate(self, acc, bins, leaf, w, stats, labels, st, Lp):
+        return acc + jax.vmap(
+            lambda lf, ww, stt: self._tables(None, st, Lp + 1, bins, lf, ww,
+                                             stt, labels))(leaf, w, stats)
+
+    def stream_finalize(self, acc):
+        return acc
 
     def _tables(self, inp, st, W, bins, slots, w, stats, labels):
         if self.backend == "kernel":

@@ -31,7 +31,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import bagging
+from repro.core import bagging, splits
 from repro.core.level.engines import (CategoricalTable, ExactNumeric,
                                       HistNumeric, LevelInputs, LevelStatics,
                                       SplitEngine)
@@ -44,6 +44,9 @@ from repro.core.level.engines import (CategoricalTable, ExactNumeric,
 _STEP_CALLS = [0]          # per-tree fused level dispatches (build_tree)
 _BATCH_STEP_CALLS = [0]    # batched level dispatches (build_forest)
 _BATCH_STEP_TRACES = [0]   # distinct compilations of the batched program
+_STREAM_CHUNK_CALLS = [0]  # streamed per-chunk dispatches (build_forest_streamed)
+_STREAM_CHUNK_TRACES = [0]  # distinct compilations of the chunk program
+_STREAM_SCORE_TRACES = [0]  # distinct compilations of the stream scorer
 
 # Above this many row-state elements (T·m_num·n) the batched level step
 # switches from vmap (SIMD across trees) to lax.map (sequential trees, one
@@ -656,3 +659,124 @@ def _fused_level_step_batched(num, cat, labels, sorted_vals, sorted_idx,
     else:
         new_ord_idx = ord_idx
     return struct, new_leaf_of, new_ord_idx, next_totals, new_tables
+
+
+# ---------------------------------------------------------------------------
+# Out-of-core streaming level steps (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+#
+# `tree.build_forest_streamed` splits the fused level step into three
+# jitted programs so the n-sized state never has to exist on device:
+#
+#   _stream_chunk_step     per chunk: replay the PREVIOUS level's winning
+#                          conditions on the chunk's bin block (the same
+#                          `_eval_conditions_core` bin fast path),
+#                          recompute row stats, and fold the chunk into
+#                          the engine's table accumulator.  Statics are
+#                          (plan, Lp, Lpp, root, need_tables) — the padded
+#                          widths change O(log L) times per fit, so chunk
+#                          iteration NEVER retraces per chunk.
+#   _stream_finalize_step  per level: merge the accumulator (the sharded
+#                          engine's one psum) and reduce the per-leaf
+#                          totals the host reads for node values.
+#   _stream_score_step     per level: candidate draw + histogram scoring +
+#                          the EXACT `_level_step_core` winner/child-id
+#                          formulas, on (T, m, L+1, B, S) tables alone —
+#                          engine-independent, no row state.
+#
+# Classification tables are integer-valued f32, so the chunked
+# accumulation is bit-equal to the single-pass scatter; everything
+# downstream of the tables is shared arithmetic with the in-memory path,
+# which is what makes streamed fits node-for-node identical.
+
+_STREAM_CHUNK_STATICS = ("plan", "Lp", "Lpp", "root", "need_tables")
+
+
+@functools.partial(jax.jit, static_argnames=_STREAM_CHUNK_STATICS)
+def _stream_chunk_step(bins_c, labels_c, w_c, leaf_prev_c, feat_of_leaf,
+                       cut_of_leaf, new_left, new_right, tables, *,
+                       plan, Lp, Lpp, root, need_tables):
+    """Fold one fixed-shape row chunk into the level accumulator.
+
+    bins_c (m_num, c) packed; labels_c (c,); w_c/leaf_prev_c (T, c);
+    feat_of_leaf/cut_of_leaf/new_left/new_right (T, Lpp+1) — the previous
+    level's decisions (unused when `root`).  Returns (leaf_c (T, c) — the
+    chunk's CURRENT-level leaf ids, fetched back to the host-resident
+    assignment — and the updated accumulator).  Padding rows ride with
+    w = 0 and leaf_prev = 0: they stay closed and contribute zero.
+    """
+    _STREAM_CHUNK_TRACES[0] += 1
+    c = labels_c.shape[0]
+    statics = plan.statics
+
+    if root:
+        leaf_c = leaf_prev_c
+    else:
+        def reassign(lf, feat, cut, nl, nr):
+            jn = jnp.clip(feat[lf], 0, max(plan.m_num - 1, 0))
+            xbin = bins_c[jn, jnp.arange(c)].astype(jnp.int32)
+            bit = xbin <= cut[lf].astype(jnp.int32)
+            return jnp.where(lf > 0, jnp.where(bit, nl[lf], nr[lf]), 0)
+        leaf_c = jax.vmap(reassign)(leaf_prev_c, feat_of_leaf, cut_of_leaf,
+                                    new_left, new_right)
+
+    stats_c = jax.vmap(lambda ww: splits.row_stats(
+        labels_c, ww, plan.num_classes, plan.task))(w_c)
+    if need_tables:
+        tables = plan.numeric.stream_accumulate(
+            tables, bins_c, leaf_c, w_c, stats_c, labels_c, statics, Lp)
+    else:
+        # final level: no more splits to score — accumulate only the
+        # per-leaf stat totals (T, Lp+1, S) for the node values
+        def tot(lf, ww, stt):
+            inb = (ww > 0) & (lf > 0)
+            return jax.ops.segment_sum(jnp.where(inb[:, None], stt, 0.0),
+                                       lf, num_segments=Lp + 1)
+        tables = tables + jax.vmap(tot)(leaf_c, w_c, stats_c)
+    return leaf_c, tables
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _stream_finalize_step(tables, *, plan):
+    """Merge the chunk accumulator and reduce per-leaf totals.
+
+    Returns (merged (T, m, L+1, B, S) tables, totals (T, L+1, S)).  The
+    totals come from feature 0's table summed over bins — for integer
+    classification stats this equals the direct per-row segment_sum
+    bit-for-bit (every in-bag row lands in exactly one bin)."""
+    merged = plan.numeric.stream_finalize(tables)
+    return merged, merged[:, 0].sum(axis=2)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "Lp"))
+def _stream_score_step(tables, splittable_p, fkeys, depth, *, plan, Lp):
+    """Score one level from merged tables: `_level_step_core`'s candidate
+    draw → histogram scoring → winner argmax → child-id assignment, with
+    no row state (numeric hist only, so the m_cat branches drop out).
+    Returns the per-tree decision struct; `thr` holds winning BIN INDICES
+    (plan.use_bin_cuts) and `new_left`/`new_right`/`feat_of_leaf` feed the
+    next level's chunk reassignment."""
+    _STREAM_SCORE_TRACES[0] += 1
+
+    def per_tree(tb, sp, fk):
+        cand_p = _candidates(fk, depth, sp, Lp, plan)           # (L+1, m)
+        g, cuts = jax.vmap(
+            lambda t, cd: splits.best_numeric_split_histogram(
+                t, cd, plan.impurity, plan.task, plan.min_records))(
+            tb, cand_p[:, :plan.m_num].T)
+        best_feat = jnp.argmax(g, axis=0).astype(jnp.int32)
+        best_gain = jnp.take_along_axis(g, best_feat[None], 0)[0]
+        will_split = sp & jnp.isfinite(best_gain) & (best_gain > 1e-9)
+        ks = jnp.cumsum(will_split.astype(jnp.int32))
+        new_left = jnp.where(will_split, 2 * ks - 1, 0).astype(jnp.int32)
+        new_right = jnp.where(will_split, 2 * ks, 0).astype(jnp.int32)
+        feat_of_leaf = jnp.where(will_split, best_feat, 0).astype(jnp.int32)
+        thr_sel = jnp.take_along_axis(
+            cuts, jnp.clip(best_feat, 0, max(plan.m_num - 1, 0))[None], 0)[0]
+        thr_of_leaf = jnp.where(will_split, thr_sel, 0.0)
+        return {"best_feat": best_feat, "best_gain": best_gain,
+                "thr": thr_of_leaf, "will_split": will_split,
+                "new_left": new_left, "new_right": new_right,
+                "feat_of_leaf": feat_of_leaf}
+
+    return jax.vmap(per_tree)(tables, splittable_p, fkeys)

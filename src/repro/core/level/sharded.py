@@ -195,6 +195,58 @@ class ShardedHistNumeric(_MeshEngine):
     needs_bins = True
     bin_cut_thresholds = True
     carries_tables = True
+    supports_stream = True
+
+    # -- streaming (DESIGN.md §8) -------------------------------------------
+    # The accumulator keeps a leading row-shard axis R so `stream_accumulate`
+    # is collective-FREE: each row shard adds its local chunk tables into
+    # its own accumulator slice, and the level's single psum happens once
+    # in `stream_finalize` — the same one-merge-per-level network profile
+    # as the in-memory engine.
+
+    def _acc_spec(self):
+        return P(self.row_axis, None, self.feature_axis, None, None, None)
+
+    def stream_init(self, T, st, Lp):
+        from jax.sharding import NamedSharding
+        S = st.num_classes if st.task == "classification" else 3
+        R = self.row_shards()
+        zeros = jnp.zeros((R, T, st.m_num, Lp + 1, st.num_bins, S),
+                          jnp.float32)
+        if self.row_axis is None:
+            return zeros
+        return jax.device_put(zeros, NamedSharding(self.mesh,
+                                                   self._acc_spec()))
+
+    def stream_accumulate(self, acc, bins, leaf, w, stats, labels, st, Lp):
+        B = st.num_bins
+        if self.row_axis is None:
+            return acc + jax.vmap(
+                lambda lf, ww, stt: splits.feature_count_tables(
+                    bins, lf, ww, stt, Lp, B))(leaf, w, stats)[None]
+
+        def local(a, bo, lf, ww, stt):
+            # a (1, T, m_loc, L+1, B, S); bo (m_loc, c_loc); lf/ww (T, c_loc)
+            return a + jax.vmap(
+                lambda l, x, s: splits.feature_count_tables(
+                    bo, l, x, s, Lp, B))(lf, ww, stt)[None]
+
+        F, R = self.feature_axis, self.row_axis
+        return _shmap(local, self.mesh,
+                      in_specs=(self._acc_spec(), P(F, R), P(None, R),
+                                P(None, R), P(None, R, None)),
+                      out_specs=self._acc_spec())(acc, bins, leaf, w, stats)
+
+    def stream_finalize(self, acc):
+        if self.row_axis is None:
+            return acc[0]
+
+        def merge(a):
+            return jax.lax.psum(a[0], self.row_axis)
+
+        return _shmap(merge, self.mesh, in_specs=(self._acc_spec(),),
+                      out_specs=P(None, self.feature_axis, None, None,
+                                  None))(acc)
 
     def supersplits(self, inp, st, Lp, cand):
         one = lambda x: None if x is None else x[None]

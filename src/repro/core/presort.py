@@ -13,6 +13,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @functools.partial(jax.jit, static_argnames=())
@@ -112,3 +113,118 @@ def quantize(num: jnp.ndarray, sorted_vals: jnp.ndarray,
     """
     edges = quantize_edges(sorted_vals, num_bins)
     return bin_columns(num, edges), edges
+
+
+# ---------------------------------------------------------------------------
+# Chunked (out-of-core) quantization — DESIGN.md §8
+# ---------------------------------------------------------------------------
+#
+# `quantize_edges` reads the fully presorted columns; for datasets that
+# never fit in memory the SAME order-statistic edges are found by a
+# multi-pass radix select over chunked column blocks: float32 values map
+# to order-preserving uint32 keys, pass 1 histograms the top 16 key bits
+# per column, and two refinement passes (8 bits each) narrow only the
+# <= num_bins prefixes a quantile still needs — three sequential passes
+# over the data, O(m·B) state, and edges that are BIT-EQUAL to
+# `quantize_edges(gather_sorted(...))` (asserted by the streaming parity
+# suite).  Caveats of the key order: NaNs are not supported, and a column
+# mixing -0.0/+0.0 exactly at a quantile position may differ in the sign
+# of the zero edge (the values still compare equal, so binning agrees).
+
+_KEY_GROUPS = (16, 8, 8)            # bit-group widths, high to low
+
+
+def _float_keys(block: np.ndarray) -> np.ndarray:
+    """Order-preserving uint32 keys for a float32 block (same shape)."""
+    b = np.ascontiguousarray(block, np.float32).view(np.uint32)
+    return np.where(b & 0x80000000, ~b, b ^ 0x80000000).astype(np.uint32)
+
+
+def _keys_to_float(keys: np.ndarray) -> np.ndarray:
+    """Invert `_float_keys`: uint32 keys back to float32 values."""
+    k = np.asarray(keys, np.uint32)
+    b = np.where(k & 0x80000000, k ^ 0x80000000, ~k).astype(np.uint32)
+    return b.view(np.float32)
+
+
+def streaming_quantile_edges(chunks, n: int, m_num: int,
+                             num_bins: int) -> np.ndarray:
+    """Exact per-column quantile edges from chunked column blocks.
+
+    Args:
+      chunks:   re-iterable callable; each call returns an iterator of
+                (c, m_num) float32 row blocks covering the n rows in
+                order.  Iterated once per radix pass (3 passes).
+      n/m_num:  total rows / numeric columns.
+      num_bins: bucket budget B.
+    Returns:
+      edges (m_num, B) float32 — bit-equal to
+      `quantize_edges(gather_sorted(num, presort_columns(num)), B)` (the
+      in-memory recipe) at the same order-statistic positions
+      pos = clip((arange(1, B+1)·n)//B − 1, 0, n−1).
+    """
+    assert n > 0 and m_num > 0
+    pos = (np.arange(1, num_bins + 1, dtype=np.int64) * n) // num_bins - 1
+    pos = np.clip(pos, 0, n - 1)
+    rank = np.broadcast_to(pos + 1, (m_num, num_bins)).astype(np.int64)
+    rank = rank.copy()                       # remaining rank inside prefix
+    pref = np.zeros((m_num, num_bins), np.int64)   # resolved high bits
+    done = 0
+    for g, width in enumerate(_KEY_GROUPS):
+        shift = 32 - done - width
+        size = 1 << width
+        if g == 0:
+            counts = np.zeros((m_num, size), np.int64)
+            for block in chunks():
+                keys = _float_keys(block) >> np.uint32(shift)
+                for j in range(m_num):
+                    counts[j] += np.bincount(keys[:, j], minlength=size)
+            for j in range(m_num):
+                cum = np.cumsum(counts[j])
+                gsel = np.searchsorted(cum, rank[j], side="left")
+                rank[j] -= np.where(gsel > 0, cum[gsel - 1], 0)
+                pref[j] = gsel
+        else:
+            # refine only the prefixes some quantile still needs
+            uniq = [np.unique(pref[j]) for j in range(m_num)]
+            P = max(len(u) for u in uniq)
+            counts = np.zeros((m_num, P, size), np.int64)
+            mask = size - 1
+            for block in chunks():
+                keys = _float_keys(block)
+                hi = keys >> np.uint32(shift + width)
+                sub = (keys >> np.uint32(shift)).astype(np.int64) & mask
+                for j in range(m_num):
+                    u = uniq[j]
+                    idx = np.searchsorted(u, hi[:, j])
+                    idx_c = np.minimum(idx, len(u) - 1)
+                    match = u[idx_c] == hi[:, j]
+                    flat = idx_c[match] * size + sub[:, j][match]
+                    counts[j] += np.bincount(
+                        flat, minlength=P * size).reshape(P, size)
+            for j in range(m_num):
+                pi = np.searchsorted(uniq[j], pref[j])
+                cum = np.cumsum(counts[j], axis=1)[pi]      # (B, size)
+                gsel = (cum < rank[j][:, None]).sum(1)
+                before = np.where(gsel > 0,
+                                  cum[np.arange(num_bins), gsel - 1], 0)
+                rank[j] -= before
+                pref[j] = (pref[j] << width) | gsel
+        done += width
+    return _keys_to_float(pref.astype(np.uint32))
+
+
+def bin_block(block: np.ndarray, edges: np.ndarray) -> np.ndarray:
+    """Host-side chunk binning: (c, m_num) float32 -> (m_num, c) packed.
+
+    The numpy twin of `bin_columns` for RowSource chunk streams — same
+    rule (`searchsorted(edges[j, :-1], v, side="left")`, values above the
+    column max land in the last bucket), same `bin_dtype` packing, so a
+    chunk-binned cache is bit-equal to the in-memory one.
+    """
+    m_num, B = edges.shape
+    dt = np.uint8 if B <= 256 else np.uint16
+    out = np.empty((m_num, block.shape[0]), dt)
+    for j in range(m_num):
+        out[j] = np.searchsorted(edges[j, :-1], block[:, j], side="left")
+    return out

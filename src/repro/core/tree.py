@@ -454,6 +454,12 @@ def build_tree(
         cat_engine=cat_engine)
     task = params.task
     hist = params.split_mode == "hist"
+    # dataset.from_numpy keeps columns HOST-side (lazy for mmap inputs);
+    # device-put once here so every level reads device arrays, not
+    # re-uploaded numpy (no-op when already on device)
+    num, cat, labels = jnp.asarray(num), jnp.asarray(cat), jnp.asarray(labels)
+    sorted_vals = jnp.asarray(sorted_vals)
+    sorted_idx = jnp.asarray(sorted_idx)
     bin_of, bin_edges = _hist_state(num, sorted_vals, params, m_num,
                                     bin_of, bin_edges)
     # hist fast path: float edges stay HOST-side, decoding the reported
@@ -673,6 +679,11 @@ def build_forest(
             "level.SplitEngine (engine=...) or use build_tree")
     task = params.task
     hist = params.split_mode == "hist"
+    # device-put the (possibly host-lazy, see dataset.from_numpy) shared
+    # inputs once, before the level loop
+    num, cat, labels = jnp.asarray(num), jnp.asarray(cat), jnp.asarray(labels)
+    sorted_vals = jnp.asarray(sorted_vals)
+    sorted_idx = jnp.asarray(sorted_idx)
     # the bucket state is tree-independent (quantized once per forest):
     # shared read-only input of the batched step, like the presorted order
     bin_of, bin_edges = _hist_state(num, sorted_vals, params, m_num,
@@ -901,6 +912,248 @@ def build_forest(
 
     return ([_assemble_tree(a, max_arity, m_num, task) for a in accs],
             stats_logs)
+
+
+# ---------------------------------------------------------------------------
+# The out-of-core streamed forest driver (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def build_forest_streamed(
+    *,
+    source,
+    params: TreeParams, seed: int, tree_indices,
+    collect_stats: bool = False,
+    engine: Optional[SplitEngine] = None,
+) -> tuple[list[Tree], list[list[LevelStats]]]:
+    """Train a batch of hist-mode trees from a `dataset.RowSource`.
+
+    The dataset never exists on device (nor, for `MemmapRowSource`, in
+    host memory): per depth level the driver streams fixed-shape row
+    chunks of the bit-packed bin cache through the jitted
+    `_stream_chunk_step`, which replays the previous level's winning
+    conditions on the chunk and folds it into the engine's per-leaf
+    (feature, bin, stat) table accumulator.  One `_stream_finalize_step`
+    merges the accumulator (the sharded engine's single per-level psum)
+    and one `_stream_score_step` runs the exact `_level_step_core`
+    candidate/score/winner arithmetic on the tables alone.  Leaf
+    assignments live in a HOST (T, n) int32 array, written back chunk by
+    chunk — peak device memory is bounded by the chunk size and the table
+    width, independent of n.
+
+    Restrictions (clear errors below): hist split mode only (exact needs
+    the presort; only hist streams), classification only (integer-valued
+    tables make chunked accumulation exact), numeric columns only, and
+    the source's bucket budget must match `params.num_bins`.  Poisson /
+    multinomial bagging draws the per-tree (n,) bootstrap weights on
+    device once (the one n-sized transient, transferred to host
+    immediately); `bagging="none"` streams with strictly chunk-bounded
+    device memory.
+
+    Bit-parity: produces node-for-node the trees of `build_forest` on the
+    same quantized state for every chunk size, asserted by
+    tests/test_stream_parity.py.
+
+    Returns (trees, stats_logs), parallel lists over `tree_indices`.
+    """
+    from repro.core.dataset import RowSource
+    from repro.core.level.plan import (_STREAM_CHUNK_CALLS,
+                                       _stream_chunk_step,
+                                       _stream_finalize_step,
+                                       _stream_score_step)
+    if not isinstance(source, RowSource):
+        raise TypeError(
+            f"build_forest_streamed needs a dataset.RowSource, got "
+            f"{type(source).__name__} — wrap the data with "
+            f"ArrayRowSource.from_dataset / MemmapRowSource.build")
+    if params.split_mode != "hist":
+        raise ValueError(
+            "streaming training requires split_mode='hist': exact mode "
+            "needs the full presorted order, which cannot be built from a "
+            "disk-backed source (exact needs the presort; only hist "
+            "streams)")
+    if params.task != "classification" or source.task != "classification":
+        raise ValueError(
+            "streaming training is classification-only: its chunked table "
+            "accumulation is exact because classification tables hold "
+            "integer-valued counts; regression y-sums could drift")
+    if source.m_num < 1:
+        raise ValueError("streaming training needs >= 1 numeric column")
+    if source.num_bins != params.num_bins:
+        raise ValueError(
+            f"RowSource was quantized with num_bins={source.num_bins} but "
+            f"TreeParams has num_bins={params.num_bins} — rebuild the "
+            f"source or match the params")
+
+    # subtraction is a no-op under fixed-shape chunks (every chunk is
+    # scanned anyway), and PR 5 proved subtract == plain bit-identical,
+    # so the streamed plan always runs the plain table build
+    params_pl = dataclasses.replace(params, hist_subtract=False)
+    m_num = source.m_num
+    m_prime = params.num_candidates or max(
+        1, math.isqrt(m_num) + (0 if math.isqrt(m_num) ** 2 == m_num else 1))
+    plan = make_plan(params_pl, m_num=m_num, m_cat=0, max_arity=1,
+                     num_classes=source.num_classes, m_prime=m_prime,
+                     engine=engine)
+    if not getattr(plan.numeric, "supports_stream", False):
+        raise ValueError(
+            f"engine {plan.numeric!r} does not support chunked "
+            f"accumulation (supports_stream)")
+    task = params.task
+    num_classes = source.num_classes
+    n = source.n
+    statics = plan.statics
+    edges_np = source.edges
+    tidx = [int(t) for t in tree_indices]
+    T = len(tidx)
+    assert T >= 1
+
+    # host-resident per-row state: labels, bootstrap weights, leaf ids
+    labels_np = np.ascontiguousarray(source.labels, np.int32)
+    if params.bagging == "none":
+        w_np = np.ones((T, n), np.float32)
+    else:
+        # per-tree draws (bit-identical to bag_counts_forest), fetched to
+        # host one at a time — the single n-sized device transient
+        w_np = np.empty((T, n), np.float32)
+        for i, t in enumerate(tidx):
+            w_np[i] = np.asarray(bagging.bag_counts(seed, t, n,
+                                                    params.bagging))
+    base_key = jax.random.PRNGKey(seed ^ 0x5EED)
+    fkeys = jax.vmap(lambda t: jax.random.fold_in(base_key, t))(
+        jnp.asarray(tidx, jnp.int32))
+
+    accs = [_NodeAccum(num_classes, task) for _ in range(T)]
+    open_nodes = [[a.new_node(0)] for a in accs]
+    stats_logs: list[list[LevelStats]] = [[] for _ in range(T)]
+    leaf_np = np.ones((T, n), np.int32)
+    active = None                   # original row ids of the active rows
+    n_act = n
+    Ls = [1] * T
+
+    rs = plan.row_shards
+    chunk = max(1, int(source.chunk_size))
+    # previous level's device-side decisions for the chunk reassignment
+    dec = (jnp.zeros((T, 1), jnp.int32), jnp.zeros((T, 1), jnp.float32),
+           jnp.zeros((T, 1), jnp.int32), jnp.zeros((T, 1), jnp.int32))
+    Lpp = 0
+    S_dim = num_classes
+
+    for depth in range(params.max_depth + 1):
+        if max(Ls) == 0:
+            break
+        Lp = _pad_leaves(max(Ls), params.leaf_pad)
+        at_max_depth = depth >= params.max_depth
+        need_tables = not at_max_depth
+        root = depth == 0
+
+        # --- chunk pass: reassign + accumulate --------------------------
+        if need_tables:
+            acc_dev = plan.numeric.stream_init(T, statics, Lp)
+        else:       # terminal level: per-leaf stat totals only
+            acc_dev = jnp.zeros((T, Lp + 1, S_dim), jnp.float32)
+        # fixed-shape chunk buffers, padded to a row-shard multiple (pad
+        # rows ride with w = 0 / leaf 0 and contribute exactly zero)
+        C_buf = max(rs, -(-min(chunk, max(n_act, 1)) // rs) * rs)
+        bins_buf = np.zeros((m_num, C_buf),
+                            np.dtype(presort.bin_dtype(params.num_bins)))
+        labels_buf = np.zeros((C_buf,), np.int32)
+        w_buf = np.zeros((T, C_buf), np.float32)
+        leaf_buf = np.zeros((T, C_buf), np.int32)
+        for lo in range(0, n_act, C_buf):
+            hi = min(lo + C_buf, n_act)
+            c = hi - lo
+            if c < C_buf:           # zero the pad of the final chunk
+                bins_buf[:, c:] = 0
+                labels_buf[c:] = 0
+                w_buf[:, c:] = 0.0
+                leaf_buf[:, c:] = 0
+            bins_buf[:, :c] = (source.bins_block(lo, hi) if active is None
+                               else source.bins_take(active[lo:hi]))
+            labels_buf[:c] = labels_np[lo:hi]
+            w_buf[:, :c] = w_np[:, lo:hi]
+            leaf_buf[:, :c] = leaf_np[:, lo:hi]
+            _STREAM_CHUNK_CALLS[0] += 1
+            leaf_c, acc_dev = _stream_chunk_step(
+                bins_buf, labels_buf, w_buf, leaf_buf, *dec, acc_dev,
+                plan=plan, Lp=Lp, Lpp=Lpp, root=root,
+                need_tables=need_tables)
+            leaf_np[:, lo:hi] = np.asarray(leaf_c)[:, :c]
+
+        # --- finalize: merged tables + per-leaf totals -------------------
+        if need_tables:
+            merged, totals_dev = _stream_finalize_step(acc_dev, plan=plan)
+            totals_np = np.asarray(totals_dev)
+        else:
+            merged, totals_np = None, np.asarray(acc_dev)
+        counts = totals_np.sum(-1)                        # classification
+
+        for t in range(T):
+            for h in range(1, Ls[t] + 1):
+                accs[t].set_value(open_nodes[t][h - 1], totals_np[t, h],
+                                  counts[t, h], task)
+
+        splittable_p = np.zeros((T, Lp + 1), bool)
+        if not at_max_depth:
+            for t in range(T):
+                if Ls[t]:
+                    splittable_p[t, 1:Ls[t] + 1] = \
+                        counts[t, 1:Ls[t] + 1] >= 2 * params.min_records
+        if not splittable_p.any():
+            break                         # values already written
+
+        # --- score: one program on the tables alone ----------------------
+        res = _stream_score_step(merged, jnp.asarray(splittable_p), fkeys,
+                                 jnp.int32(depth), plan=plan, Lp=Lp)
+        host = jax.device_get({k: res[k] for k in
+                               ("best_feat", "best_gain", "thr",
+                                "will_split")})
+        dec = (res["feat_of_leaf"], res["thr"], res["new_left"],
+               res["new_right"])
+        Lpp = Lp
+
+        ws = host["will_split"]
+        no_mask = np.zeros((Lp + 1, 1), bool)             # numeric-only
+        Ls_next = [0] * T
+        for t in range(T):
+            if Ls[t] == 0:
+                continue
+            host_t = {k: host[k][t] for k in
+                      ("best_feat", "best_gain", "thr", "will_split")}
+            host_t["mask"] = no_mask
+            next_open, any_split = _grow_level(
+                accs[t], open_nodes[t], host_t, Ls[t], m_num, depth,
+                edges_np=edges_np)
+            if collect_stats:
+                Lp_t = _pad_leaves(Ls[t], params.leaf_pad)
+                passes = int(min(m_prime * (1 if params.usb else Ls[t]),
+                                 m_num))
+                stats_logs[t].append(LevelStats(
+                    depth=depth, open_leaves=Ls[t],
+                    network_bits_bitmap=int(counts[t, 1:Ls[t] + 1].sum()),
+                    network_bits_supersplit=int(m_num * (Lp_t + 1) * 64),
+                    class_list_bits=class_list.storage_bits(n_act, Ls[t]),
+                    feature_passes=passes, rows_scanned=n_act * passes,
+                    hist_table_bytes=m_num * (Lp_t + 1) * params.num_bins
+                    * S_dim * 4))
+            if any_split:
+                open_nodes[t] = next_open
+            Ls_next[t] = 2 * int(ws[t, 1:Ls[t] + 1].sum())
+        Ls = Ls_next
+
+        # --- Sprint pruning, HOST-side: drop rows closed in every tree ---
+        # (result-invariant; fixed-shape padded chunks need no divisibility)
+        if params.prune_closed_frac < 1.0 and n_act > 0 and max(Ls) > 0:
+            open_any = (leaf_np > 0).any(axis=0)
+            closed = n_act - int(open_any.sum())
+            if closed > 0 and closed / n_act >= params.prune_closed_frac:
+                keep = np.flatnonzero(open_any)
+                active = keep if active is None else active[keep]
+                leaf_np = np.ascontiguousarray(leaf_np[:, keep])
+                w_np = np.ascontiguousarray(w_np[:, keep])
+                labels_np = np.ascontiguousarray(labels_np[keep])
+                n_act = len(keep)
+
+    return ([_assemble_tree(a, 1, m_num, task) for a in accs], stats_logs)
 
 
 # ---------------------------------------------------------------------------

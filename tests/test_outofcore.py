@@ -1,0 +1,58 @@
+"""Disk-backed streaming training at moderate n (`-m outofcore`).
+
+Excluded from tier-1 (disk-heavy); run explicitly with
+``pytest -m outofcore``.  Exercises the whole out-of-core path end to
+end at a size where multiple chunks, multiple levels, and the memmap
+round-trip all matter: deterministic per-chunk generation -> 3-pass
+streaming quantizer -> uint8 bin cache on disk -> `fit_streamed` — and
+cross-checks the result against an in-memory fit of the SAME generated
+data, so the test certifies the full chain, not just that it runs.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import tree as tree_lib
+from repro.core.dataset import MemmapRowSource, from_numpy
+from repro.core.forest import RandomForest
+
+pytestmark = pytest.mark.outofcore
+
+
+@pytest.mark.parametrize("n", [200_000])
+def test_disk_backed_fit_moderate_n(tmp_path, n):
+    m, chunk = 6, 1 << 14
+
+    def chunks():
+        for i, lo in enumerate(range(0, n, chunk)):
+            c = min(chunk, n - lo)
+            rng = np.random.default_rng(100 + i)
+            yield rng.normal(size=(c, m)).astype(np.float32)
+
+    y = np.empty(n, np.int32)
+    lo = 0
+    for block in chunks():
+        y[lo:lo + len(block)] = ((block[:, :3] > 0).sum(1) >= 2)
+        lo += len(block)
+
+    params = tree_lib.TreeParams(max_depth=6, split_mode="hist",
+                                 num_bins=32)
+    path = str(tmp_path / "bins.npy")
+    src = MemmapRowSource.build(chunks, n, y, num_bins=params.num_bins,
+                                path=path, num_classes=2, chunk_size=chunk)
+    assert os.path.getsize(path) >= n * m          # uint8 cache really on disk
+    fs = RandomForest(params=params, num_trees=2, seed=11).fit_streamed(src)
+
+    # the in-memory reference on the same data: identical trees
+    num = np.concatenate(list(chunks()), axis=0)
+    ref = RandomForest(params=params, num_trees=2, seed=11).fit(
+        from_numpy(num, None, y))
+    for t, (ta, tb) in enumerate(zip(ref.trees, fs.trees)):
+        assert ta.num_nodes == tb.num_nodes, t
+        for f in ("feature", "children", "threshold", "value", "n_node",
+                  "gain", "depth"):
+            np.testing.assert_array_equal(getattr(ta, f), getattr(tb, f),
+                                          err_msg=f"tree{t}/{f}")
+    # a real multi-level, multi-chunk run
+    assert max(tr.depth.max() for tr in fs.trees) >= 3

@@ -308,6 +308,68 @@ def test_oracle_on_degenerate_leaves():
 
 
 # ---------------------------------------------------------------------------
+# Streamed histogram accumulation vs the brute-force oracle
+# (the out-of-core path: tables built chunk by chunk, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def test_hist_scorer_on_streamed_tables_matches_oracle():
+    """Hist-mode scoring from CHUNK-ACCUMULATED count tables equals the
+    numpy oracle restricted to bucket-boundary thresholds — the same
+    adversarial cases (ties, constant column, bagged-out leaf) as the
+    exact engines, with the tables built over uneven chunk boundaries
+    exactly like `build_forest_streamed` builds them."""
+    from repro.core import presort
+    B = 16
+    for seed in (0, 5):
+        num, leaf, w, y = make_case(seed)
+        n, m = num.shape
+        L, C = int(leaf.max()), int(y.max()) + 1
+        si = presort.presort_columns(jnp.asarray(num))
+        sv = presort.gather_sorted(jnp.asarray(num), si)
+        edges = np.asarray(presort.quantize_edges(sv, B))
+        bins = presort.bin_block(num, edges)               # (m, n)
+        stats = splits.row_stats(jnp.asarray(y), jnp.asarray(w), C,
+                                 "classification")
+        table = np.zeros((m, L + 1, B, C), np.float32)
+        for lo in range(0, n, 83):                         # uneven tail
+            hi = min(lo + 83, n)
+            table += np.asarray(splits.feature_count_tables(
+                jnp.asarray(np.ascontiguousarray(bins[:, lo:hi])),
+                jnp.asarray(leaf[lo:hi]), jnp.asarray(w[lo:hi]),
+                stats[lo:hi], L, B))
+        cand = jnp.asarray([False] + [True] * L)
+        for j in range(m):
+            g, cut = splits.best_numeric_split_histogram(
+                jnp.asarray(table[j]), cand)
+            g, cut = np.asarray(g), np.asarray(cut)
+            for h in range(1, L + 1):
+                sel = leaf == h
+                vj, yj, wj = num[sel, j], y[sel], w[sel]
+                best = -np.inf
+                for b in range(B - 1):                     # boundary sweep
+                    thr = edges[j, b]
+                    nl = wj[(vj <= thr) & (wj > 0)].sum()
+                    nr = wj[(vj > thr) & (wj > 0)].sum()
+                    if nl < 1 or nr < 1:
+                        continue
+                    gb = oracle_gain_at(vj, yj, wj, C, thr)
+                    if gb > best:                          # first max wins
+                        best = gb
+                ctx = f"seed{seed}/col{j}/leaf{h}"
+                if not np.isfinite(best):
+                    assert not np.isfinite(g[h]), ctx
+                    continue
+                assert np.isfinite(g[h]), ctx
+                np.testing.assert_allclose(g[h], best, rtol=1e-4,
+                                           atol=1e-4, err_msg=ctx)
+                # the decoded float threshold reproduces the scored
+                # partition (bin <= b  <=>  x <= edges[b])
+                ga = oracle_gain_at(vj, yj, wj, C, edges[j, int(cut[h])])
+                np.testing.assert_allclose(ga, best, rtol=1e-4, atol=1e-4,
+                                           err_msg=ctx + "/thr")
+
+
+# ---------------------------------------------------------------------------
 # Whole-tree oracle: a recursive numpy reference builder vs build_tree
 # (ROADMAP "Exact-oracle suite follow-up")
 # ---------------------------------------------------------------------------
