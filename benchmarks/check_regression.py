@@ -15,7 +15,10 @@ per-tree path).
 
 Wired into the `-m slow` suite (tests/test_bench_regression.py).
 Structural counters (level-program counts) are compared EXACTLY — a
-changed dispatch count is a behavior change, not noise.
+changed dispatch count is a behavior change, not noise.  ``gate::``
+metrics are checked against ABSOLUTE bounds (`GATE_BOUNDS`) rather than
+a baseline ratio — e.g. the checkpoint-write overhead fraction of the
+smoke out-of-core fit must stay <= 5% regardless of the box.
 """
 from __future__ import annotations
 
@@ -27,6 +30,32 @@ import sys
 BASELINE_PATH = os.environ.get("BENCH_SMOKE_BASELINE_JSON",
                                os.path.join(os.path.dirname(__file__), "..",
                                             "BENCH_smoke_baseline.json"))
+
+# Absolute bounds for ``gate::`` metrics (checked against the FRESH run
+# only — these are invariants of the implementation, not of the box that
+# wrote the baseline).  Prefix-matched against the metric name.
+GATE_BOUNDS = {
+    # fraction of the checkpointed streamed-fit wall spent inside
+    # checkpoint disk writes (ISSUE 10 acceptance: <= 5%)
+    "gate::outofcore/ckpt_overhead_frac/": 0.05,
+}
+
+
+def _point_metric(point: dict, key: str, bench: str):
+    """Index a benchmark point dict with a diagnosable failure mode.
+
+    A missing key means the benchmark module and this gate have drifted
+    apart (e.g. a renamed field) — that should read as exactly that, not
+    as a bare KeyError traceback.
+    """
+    try:
+        return point[key]
+    except KeyError:
+        raise SystemExit(
+            f"check_regression: smoke benchmark '{bench}' returned a point "
+            f"without the key '{key}' (point: {sorted(point)}); the "
+            f"benchmark schema and benchmarks/check_regression.py have "
+            f"drifted apart — update _run_smoke_benches") from None
 
 
 def _collect_smoke_metrics(tmpdir) -> dict:
@@ -64,32 +93,47 @@ def _run_smoke_benches(forest_batch_bench, hist_mode_bench,
     metrics: dict = {}
     forest = forest_batch_bench.run(smoke=True)
     for p in forest["points"]:
-        metrics[f"forest/batched_s/n{p['n']}"] = p["batched_s"]
-        metrics[f"forest/per_tree_s/n{p['n']}"] = p["per_tree_s"]
-        metrics[f"programs::forest/batched/n{p['n']}"] = \
-            p["level_programs_batched"]
+        n = _point_metric(p, "n", "forest")
+        metrics[f"forest/batched_s/n{n}"] = \
+            _point_metric(p, "batched_s", "forest")
+        metrics[f"forest/per_tree_s/n{n}"] = \
+            _point_metric(p, "per_tree_s", "forest")
+        metrics[f"programs::forest/batched/n{n}"] = \
+            _point_metric(p, "level_programs_batched", "forest")
     hist = hist_mode_bench.run(smoke=True)
     for p in hist["points"]:
-        metrics[f"hist/exact_s/n{p['n']}"] = p["exact_fit_s"]
-        for mode in p["hist"]:
+        n = _point_metric(p, "n", "hist")
+        metrics[f"hist/exact_s/n{n}"] = _point_metric(p, "exact_fit_s", "hist")
+        for mode in _point_metric(p, "hist", "hist"):
             # tagged since ISSUE 5: hist<B> = the subtraction fast path,
             # hist<B>-plain = per-level rebuild — both gated so a lost
             # fast path shows up as a wall regression
-            tag = mode.get("tag", f"hist{mode['num_bins']}")
-            metrics[f"hist/{tag}_s/n{p['n']}"] = mode["fit_s"]
+            tag = mode.get("tag", f"hist{_point_metric(mode, 'num_bins', 'hist')}")
+            metrics[f"hist/{tag}_s/n{n}"] = _point_metric(mode, "fit_s", "hist")
     dist = dist_batch_bench.run(smoke=True)
     for c in dist["configs"]:
-        metrics[f"dist/{c['mode']}/batched_s"] = c["batched_s"]
-        metrics[f"programs::dist/{c['mode']}/batched"] = \
-            c["level_programs_batched"]
+        mode = _point_metric(c, "mode", "dist")
+        metrics[f"dist/{mode}/batched_s"] = _point_metric(c, "batched_s", "dist")
+        metrics[f"programs::dist/{mode}/batched"] = \
+            _point_metric(c, "level_programs_batched", "dist")
     ooc = outofcore_bench.run(smoke=True)
     for p in ooc["points"]:
-        metrics[f"outofcore/fit_s/n{p['n']}"] = p["fit_s"]
-        metrics[f"outofcore/build_s/n{p['n']}"] = p["build_s"]
+        n = _point_metric(p, "n", "outofcore")
+        metrics[f"outofcore/fit_s/n{n}"] = _point_metric(p, "fit_s", "outofcore")
+        metrics[f"outofcore/build_s/n{n}"] = \
+            _point_metric(p, "build_s", "outofcore")
         # dispatch count is structural: a retrace-per-chunk bug would
         # not change it, but a lost accumulation loop would
-        metrics[f"programs::outofcore/chunks/n{p['n']}"] = \
-            p["chunk_programs"]
+        metrics[f"programs::outofcore/chunks/n{n}"] = \
+            _point_metric(p, "chunk_programs", "outofcore")
+    # absolute gate: checkpoint writes must stay a rounding error on the
+    # fit wall (smoke mode always measures the checkpointed fit).  Gated
+    # on the largest smoke point only — the per-snapshot cost is a fixed
+    # few ms, so the fraction at tiny n overstates what production-scale
+    # fits (the thing the 5% bound protects) would ever see.
+    big = max(ooc["points"], key=lambda p: _point_metric(p, "n", "outofcore"))
+    metrics[f"gate::outofcore/ckpt_overhead_frac/n{big['n']}"] = \
+        _point_metric(big, "ckpt_overhead_frac", "outofcore")
     return metrics
 
 
@@ -99,6 +143,8 @@ def check(fresh: dict, baseline: dict, factor: float) -> list[str]:
         if name not in fresh:
             failures.append(f"metric disappeared: {name}")
             continue
+        if name.startswith("gate::"):
+            continue                    # absolute-bound metrics, below
         now = fresh[name]
         if name.startswith("programs::"):
             if now != base:
@@ -108,6 +154,19 @@ def check(fresh: dict, baseline: dict, factor: float) -> list[str]:
             failures.append(
                 f"{name}: {now:.3f}s vs baseline {base:.3f}s "
                 f"(x{now / base:.2f} > x{factor})")
+    # gate:: metrics are implementation invariants — checked against the
+    # fresh run's absolute value, never a baseline ratio
+    for name, now in fresh.items():
+        if not name.startswith("gate::"):
+            continue
+        bound = next((b for pre, b in GATE_BOUNDS.items()
+                      if name.startswith(pre)), None)
+        if bound is None:
+            failures.append(f"{name}: no absolute bound registered in "
+                            "GATE_BOUNDS")
+        elif now > bound:
+            failures.append(
+                f"{name}: {now:.4f} exceeds absolute bound {bound}")
     return failures
 
 

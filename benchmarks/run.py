@@ -29,10 +29,10 @@ def main() -> None:
                             table1_complexity)
     args = [a for a in sys.argv[1:] if not a.startswith("--")]
     flags = {a for a in sys.argv[1:] if a.startswith("--")}
-    unknown = flags - {"--smoke", "--full"}
+    unknown = flags - {"--smoke", "--full", "--checkpoint"}
     if unknown:
         raise SystemExit(f"unknown flags: {sorted(unknown)} "
-                         "(supported: --smoke, --full)")
+                         "(supported: --smoke, --full, --checkpoint)")
     only = args[0] if args else None
     if only == "all":           # explicit umbrella (same as no selector)
         only = None
@@ -59,8 +59,12 @@ def main() -> None:
         # predict latency off the warm packed-forest descent)
         "serve": lambda: serve_bench.run(smoke=smoke),
         # writes BENCH_outofcore.json (streamed fit from a disk-backed
-        # bin cache: rows/sec vs n, target n >= 20M); honours --smoke
-        "outofcore": lambda: outofcore_bench.run(smoke=smoke),
+        # bin cache: rows/sec vs n, target n >= 20M); honours --smoke;
+        # --checkpoint adds a checkpointed fit per point and records the
+        # checkpoint-write overhead fraction (smoke always measures it)
+        "outofcore": lambda: outofcore_bench.run(smoke=smoke,
+                                                 checkpoint="--checkpoint"
+                                                 in flags),
     }
     if only and only not in benches:
         raise SystemExit(f"unknown benchmark {only!r} "

@@ -1,0 +1,54 @@
+"""Crash-safe file writes: tmp + `os.replace` (DESIGN.md §9).
+
+Every durable artifact this repo writes — `PackedForest.save` models,
+`MemmapRowSource` cache metadata, streamed-training checkpoints — goes
+through `atomic_replace`: the bytes land in a same-directory temp file
+first and `os.replace` (atomic on POSIX within one filesystem) installs
+them under the final name.  A kill at ANY instruction therefore leaves
+either the complete old file or the complete new file, never a
+truncated hybrid.
+
+The module-level hooks exist for the fault-injection harness
+(`repro.testing.faults`): tests arm them to SIGKILL the process in the
+worst possible window (after the tmp write, before the replace) and
+then prove the artifact on disk is still the intact previous version.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Callable
+
+# Test hooks (repro.testing.faults). `PRE_REPLACE_HOOK(final_path,
+# tmp_path)` runs after the tmp file is fully written, immediately
+# before `os.replace` — the window where a naive writer would have
+# already clobbered the target.  Production code never sets these.
+PRE_REPLACE_HOOK: list = [None]
+
+
+def atomic_replace(path: str, write_fn: Callable[[str], None]) -> None:
+    """Write a file atomically: `write_fn(tmp_path)` then `os.replace`.
+
+    `write_fn` must create `tmp_path` itself (open the exact path it is
+    given — e.g. `open(tmp, "wb")` for numpy savers, which would append
+    ".npz" to a bare filename).  The tmp file lives next to the target
+    so the final rename never crosses a filesystem boundary.
+    """
+    path = os.fspath(path)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        write_fn(tmp)
+        if PRE_REPLACE_HOOK[0] is not None:
+            PRE_REPLACE_HOOK[0](path, tmp)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def atomic_write_json(path: str, obj) -> None:
+    """`json.dump` through `atomic_replace` (manifests, cache sidecars)."""
+    def _write(tmp):
+        with open(tmp, "w") as f:
+            json.dump(obj, f, indent=1, sort_keys=True)
+    atomic_replace(path, _write)

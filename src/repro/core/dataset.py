@@ -7,10 +7,18 @@ dense arrays; feature ids 0..m_num-1 are numerical, m_num..m-1 categorical.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
+import logging
+import os
+import random
+import time
 from typing import Sequence
 
 import jax.numpy as jnp
 import numpy as np
+
+logger = logging.getLogger("repro.core.stream")
 
 
 @dataclasses.dataclass
@@ -118,6 +126,55 @@ def from_numpy(
 # contiguous column blocks; the streamed driver
 # (`tree.build_forest_streamed`) owns weights and leaf ids.
 
+class StreamReadError(OSError):
+    """A chunk read kept failing after the retry budget (DESIGN.md §9).
+
+    Raised by `read_with_retry` once every backoff attempt has been
+    exhausted; the streamed driver flushes its held level checkpoint
+    before letting this escape, so a resume restarts at the last
+    completed level rather than from scratch."""
+
+
+class CacheIntegrityError(RuntimeError):
+    """An on-disk bin cache disagrees with its sidecar metadata.
+
+    A truncated, dtype-mismatched, or swapped `.npy` cache would
+    otherwise train garbage trees silently — `MemmapRowSource` verifies
+    the sidecar written by `build()` before the first read."""
+
+
+def read_with_retry(fn, *args, attempts: int = 4, base_delay: float = 0.05,
+                    max_delay: float = 2.0, jitter: float = 0.5,
+                    sleep=time.sleep):
+    """Call `fn(*args)` retrying transient `OSError`s with backoff.
+
+    Delays grow exponentially from `base_delay` (capped at `max_delay`)
+    with up to `jitter`x multiplicative random jitter — the standard
+    recipe against thundering-herd re-reads on a shared filesystem.
+    Each failure logs a warning; the final one raises `StreamReadError`
+    (chained).  Retrying is SAFE for bit-parity: `bins_block` /
+    `bins_take` are pure reads, so a retried chunk is byte-identical to
+    a first-try chunk.  Integrity failures (`CacheIntegrityError`) and
+    an inner `StreamReadError` are not transient and propagate
+    immediately."""
+    for attempt in range(1, max(1, int(attempts)) + 1):
+        try:
+            return fn(*args)
+        except StreamReadError:
+            raise
+        except OSError as e:
+            if attempt >= attempts:
+                raise StreamReadError(
+                    f"stream read failed after {attempts} attempts: "
+                    f"{getattr(fn, '__qualname__', fn)!s}: {e}") from e
+            delay = min(max_delay, base_delay * (2.0 ** (attempt - 1)))
+            delay *= 1.0 + jitter * random.random()
+            logger.warning(
+                "transient stream read failure (attempt %d/%d): %s — "
+                "retrying in %.3fs", attempt, attempts, e, delay)
+            sleep(delay)
+
+
 class RowSource:
     """Host-resident binned rows for streamed hist training.
 
@@ -126,6 +183,15 @@ class RowSource:
     active row set).  Only hist mode streams: exact mode needs the full
     presort ("exact needs the presort; only hist streams" — the fit entry
     points enforce this)."""
+
+    #: retry budget for `tree.build_forest_streamed` chunk reads — every
+    #: `bins_block`/`bins_take` call in the streamed driver goes through
+    #: `read_with_retry` with these knobs (transient `OSError`s retried
+    #: with exponential backoff + jitter, then `StreamReadError`).
+    retry_attempts: int = 4
+    retry_base_delay: float = 0.05
+    retry_max_delay: float = 2.0
+    retry_sleep = staticmethod(time.sleep)
 
     def __init__(self, edges: np.ndarray, labels: np.ndarray, *,
                  num_classes: int, task: str = "classification",
@@ -202,10 +268,73 @@ class MemmapRowSource(RowSource):
         self.path = str(path)
         self._mm = None
 
+    # -- cache integrity (DESIGN.md §9) --------------------------------
+    @staticmethod
+    def meta_path(path: str) -> str:
+        return f"{path}.meta.json"
+
+    def _expected_meta(self) -> dict:
+        return {
+            "format_version": 1,
+            "n": self.n,
+            "m_num": self.m_num,
+            "dtype": np.dtype(np.uint8 if self.num_bins <= 256
+                              else np.uint16).name,
+            "num_bins": self.num_bins,
+            "edges_sha256": hashlib.sha256(
+                np.ascontiguousarray(self.edges, np.float32).tobytes()
+            ).hexdigest(),
+        }
+
+    def _verify_cache(self, mm: np.ndarray) -> None:
+        """Check the cache against its sidecar before the first read.
+
+        Caches predating the sidecar (or hand-built ones) get only the
+        shape check; a present-but-disagreeing sidecar, a truncated
+        file, or a dtype change raises `CacheIntegrityError` instead of
+        silently training garbage trees."""
+        if mm.shape != (self.n, self.m_num):
+            raise CacheIntegrityError(
+                f"bin cache {self.path!r} has shape {tuple(mm.shape)}, "
+                f"expected (n, m_num) = ({self.n}, {self.m_num}) — the "
+                f"file is truncated or belongs to a different dataset")
+        mp = self.meta_path(self.path)
+        if not os.path.exists(mp):
+            # legacy / hand-built cache: only the shape check applies.
+            # (`build()` writes the sidecar LAST, so this also catches a
+            # build that was killed mid-binning — warn, don't trust it.)
+            logger.warning(
+                "bin cache %s has no sidecar metadata (%s) — integrity "
+                "cannot be verified; rebuild with MemmapRowSource.build "
+                "to get content checks", self.path, mp)
+            return
+        try:
+            with open(mp) as f:
+                meta = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise CacheIntegrityError(
+                f"unreadable bin-cache sidecar {mp!r}: {e}") from e
+        expect = self._expected_meta()
+        bad = [k for k in expect if meta.get(k) != expect[k]]
+        if np.dtype(mm.dtype).name != meta.get("dtype"):
+            bad.append("dtype(file)")   # cache rewritten at another width
+        if bad:
+            raise CacheIntegrityError(
+                f"bin cache {self.path!r} disagrees with its sidecar "
+                f"{mp!r} (mismatched: {', '.join(bad) or 'dtype'}) — the "
+                f"cache was rebuilt, truncated, or swapped since "
+                f"`build()`; rebuild it with MemmapRowSource.build")
+
     def _cache(self) -> np.ndarray:
         if self._mm is None:
-            self._mm = np.load(self.path, mmap_mode="r")
-            assert self._mm.shape == (self.n, self.m_num)
+            try:
+                mm = np.load(self.path, mmap_mode="r")
+            except (OSError, ValueError) as e:
+                raise CacheIntegrityError(
+                    f"bin cache {self.path!r} failed to open as a .npy "
+                    f"memmap: {e}") from e
+            self._verify_cache(mm)
+            self._mm = mm
         return self._mm
 
     def bins_block(self, lo: int, hi: int) -> np.ndarray:
@@ -242,8 +371,15 @@ class MemmapRowSource(RowSource):
         labels = np.asarray(labels)
         if num_classes is None:
             num_classes = int(labels.max()) + 1 if task == "classification" else 0
-        return cls(path, edges, labels, num_classes=max(num_classes, 2),
-                   task=task, chunk_size=chunk_size)
+        src = cls(path, edges, labels, num_classes=max(num_classes, 2),
+                  task=task, chunk_size=chunk_size)
+        # sidecar written ATOMICALLY after the cache is complete — a kill
+        # mid-build leaves a cache with no sidecar (never a stale one),
+        # and `_cache()` verifies the pair on open (DESIGN.md §9)
+        from repro.core import atomicio
+        atomicio.atomic_write_json(cls.meta_path(str(path)),
+                                   src._expected_meta())
+        return src
 
     @classmethod
     def from_numpy(cls, num: np.ndarray, labels: np.ndarray, *,

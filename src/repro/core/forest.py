@@ -78,12 +78,23 @@ class PackedForest:
         is a full batched-inference stack with no Tree objects, no
         training code path, and no pickle (plain npz arrays only) — the
         stable boundary a serving process loads across repo versions.
+
+        Written atomically (tmp + `os.replace`, DESIGN.md §9): a crash
+        mid-save leaves either the previous complete model or the new
+        one, never a truncated .npz a server would fail to load.
         """
-        np.savez_compressed(
-            path,
+        import os
+
+        from repro.core import atomicio
+        p = os.fspath(path)
+        if not p.endswith(".npz"):
+            p += ".npz"          # numpy's suffix rule, applied up front
+        arrays = dict(
             format_version=np.int32(self.FORMAT_VERSION),
             m_num=np.int32(self.m_num), iters=np.int32(self.iters),
             **{k: np.asarray(getattr(self, k)) for k in self._ARRAYS})
+        atomicio.atomic_replace(
+            p, lambda tmp: np.savez_compressed(open(tmp, "wb"), **arrays))
 
     @classmethod
     def load(cls, path) -> "PackedForest":
@@ -321,7 +332,9 @@ class RandomForest:
         return self
 
     def fit_streamed(self, source, collect_stats: bool = False,
-                     engine=None) -> "RandomForest":
+                     engine=None, checkpoint_dir: Optional[str] = None,
+                     checkpoint_every: int = 1,
+                     resume: bool = False) -> "RandomForest":
         """Train the forest out-of-core from a `dataset.RowSource`.
 
         Same trees as `fit` on the equivalently quantized in-memory
@@ -330,7 +343,18 @@ class RandomForest:
         only fixed-shape chunks of the bit-packed bin cache, so peak
         device memory is bounded by `source.chunk_size`, not n.  Hist
         split mode + classification + numeric columns only (the
-        `tree.build_forest_streamed` restrictions)."""
+        `tree.build_forest_streamed` restrictions).
+
+        Fault tolerance (DESIGN.md §9): `checkpoint_dir=` snapshots the
+        in-flight tree batch's host state every `checkpoint_every`
+        levels and commits each finished batch, all atomically;
+        `resume=True` skips committed batches, restores the in-flight
+        one at its last snapshotted level, and finishes the forest
+        bit-identically to an uninterrupted fit.  Resuming against a
+        different source / params / seed raises
+        `checkpoint.CheckpointMismatchError`.  Under multi-host
+        sharding only process 0 writes; every host fingerprint-checks.
+        """
         from repro.core.dataset import RowSource, TabularDataset
         if isinstance(source, TabularDataset):
             raise TypeError(
@@ -342,6 +366,13 @@ class RandomForest:
                             f"{type(source).__name__}")
         self.num_classes = source.num_classes
         self.m = self.m_num = source.m_num
+        ck = None
+        if checkpoint_dir is not None:
+            from repro.core import checkpoint as checkpoint_lib
+            ck = checkpoint_lib.StreamCheckpointer(checkpoint_dir,
+                                                   every=checkpoint_every)
+            ck.prepare(source=source, params=self.params, seed=self.seed,
+                       resume=resume)
         tb = (max(1, min(int(self.tree_batch), self.num_trees))
               if self.tree_batch is not None else min(self.num_trees, 16))
         self.trees, self.level_stats = [], []
@@ -350,7 +381,8 @@ class RandomForest:
                 source=source,
                 tree_indices=range(lo, min(lo + tb, self.num_trees)),
                 params=self.params, seed=self.seed,
-                collect_stats=collect_stats, engine=engine)
+                collect_stats=collect_stats, engine=engine,
+                resume=resume, _checkpointer=ck)
             self.trees.extend(trees)
             self.level_stats.extend(stats)
         self.packed = pack_trees(self.trees)

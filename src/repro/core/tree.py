@@ -924,6 +924,10 @@ def build_forest_streamed(
     params: TreeParams, seed: int, tree_indices,
     collect_stats: bool = False,
     engine: Optional[SplitEngine] = None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 1,
+    resume: bool = False,
+    _checkpointer=None,
 ) -> tuple[list[Tree], list[list[LevelStats]]]:
     """Train a batch of hist-mode trees from a `dataset.RowSource`.
 
@@ -953,8 +957,21 @@ def build_forest_streamed(
     same quantized state for every chunk size, asserted by
     tests/test_stream_parity.py.
 
+    Fault tolerance (DESIGN.md §9): with `checkpoint_dir=` the driver
+    writes an atomic level snapshot of the host-side state every
+    `checkpoint_every` completed levels (`repro.core.checkpoint`), and
+    `resume=True` restarts from the last snapshot — or returns the
+    finished trees immediately if this batch already completed —
+    node-for-node bit-identical to an uninterrupted fit, because every
+    remaining level replays the same pure chunk reads through the same
+    programs.  Chunk reads are retried with exponential backoff on
+    transient `OSError`s; a persistent failure flushes the held
+    snapshot and raises `dataset.StreamReadError`.
+
     Returns (trees, stats_logs), parallel lists over `tree_indices`.
     """
+    from repro.core import checkpoint as checkpoint_lib
+    from repro.core import dataset as dataset_lib
     from repro.core.dataset import RowSource
     from repro.core.level.plan import (_STREAM_CHUNK_CALLS,
                                        _stream_chunk_step,
@@ -983,6 +1000,16 @@ def build_forest_streamed(
             f"RowSource was quantized with num_bins={source.num_bins} but "
             f"TreeParams has num_bins={params.num_bins} — rebuild the "
             f"source or match the params")
+
+    ck = _checkpointer
+    if ck is None and checkpoint_dir is not None:
+        ck = checkpoint_lib.StreamCheckpointer(checkpoint_dir,
+                                               every=checkpoint_every)
+        ck.prepare(source=source, params=params, seed=seed, resume=resume)
+    if ck is not None and resume:
+        done = ck.load_batch(tree_indices)
+        if done is not None:        # batch committed by a previous run
+            return done
 
     # subtraction is a no-op under fixed-shape chunks (every chunk is
     # scanned anyway), and PR 5 proved subtract == plain bit-identical,
@@ -1029,6 +1056,7 @@ def build_forest_streamed(
     active = None                   # original row ids of the active rows
     n_act = n
     Ls = [1] * T
+    start_depth = 0
 
     rs = plan.row_shards
     chunk = max(1, int(source.chunk_size))
@@ -1038,7 +1066,32 @@ def build_forest_streamed(
     Lpp = 0
     S_dim = num_classes
 
-    for depth in range(params.max_depth + 1):
+    if ck is not None and resume:
+        snap = ck.load_snapshot(tidx)
+        if snap is not None:
+            # restore the end-of-level state and re-derive what was not
+            # stored: labels come from the source, bag weights from the
+            # seeded draws above — both exactly as a fresh fit computes
+            # them — then the stored row map compacts them to n_act
+            st = checkpoint_lib.unpack_stream_state(
+                snap, num_classes=num_classes, task=task)
+            start_depth = st["next_depth"]
+            Ls, Lpp = st["Ls"], st["Lpp"]
+            accs, open_nodes = st["accs"], st["open_nodes"]
+            stats_logs = st["stats_logs"]
+            leaf_np, active = st["leaf"], st["active"]
+            n_act = leaf_np.shape[1]
+            if active is not None:
+                labels_np = np.ascontiguousarray(labels_np[active])
+                w_np = np.ascontiguousarray(w_np[:, active])
+            dec = tuple(jnp.asarray(d) for d in st["dec"])
+
+    retry_kw = dict(attempts=source.retry_attempts,
+                    base_delay=source.retry_base_delay,
+                    max_delay=source.retry_max_delay,
+                    sleep=source.retry_sleep)
+
+    for depth in range(start_depth, params.max_depth + 1):
         if max(Ls) == 0:
             break
         Lp = _pad_leaves(max(Ls), params.leaf_pad)
@@ -1067,8 +1120,14 @@ def build_forest_streamed(
                 labels_buf[c:] = 0
                 w_buf[:, c:] = 0.0
                 leaf_buf[:, c:] = 0
-            bins_buf[:, :c] = (source.bins_block(lo, hi) if active is None
-                               else source.bins_take(active[lo:hi]))
+            try:
+                bins_buf[:, :c] = dataset_lib.read_with_retry(
+                    *((source.bins_block, lo, hi) if active is None
+                      else (source.bins_take, active[lo:hi])), **retry_kw)
+            except dataset_lib.StreamReadError:
+                if ck is not None:  # persist the last completed level so
+                    ck.flush()      # the resume loses only this one
+                raise
             labels_buf[:c] = labels_np[lo:hi]
             w_buf[:, :c] = w_np[:, lo:hi]
             leaf_buf[:, :c] = leaf_np[:, lo:hi]
@@ -1153,7 +1212,21 @@ def build_forest_streamed(
                 labels_np = np.ascontiguousarray(labels_np[keep])
                 n_act = len(keep)
 
-    return ([_assemble_tree(a, 1, m_num, task) for a in accs], stats_logs)
+        # end-of-level state, post-bookkeeping.  The final level's snapshot
+        # is never written: finish_batch commits the trees immediately
+        # after the loop, so its only possible consumer is a crash in that
+        # gap — which the PREVIOUS snapshot already covers (one level of
+        # recompute), and skipping it saves a write on every batch.
+        if ck is not None and depth < params.max_depth:
+            ck.save_snapshot(tidx, depth, checkpoint_lib.pack_stream_state(
+                tidx=tidx, depth=depth, Ls=Ls, leaf_np=leaf_np,
+                active=active, dec=dec, Lpp=Lpp, accs=accs,
+                open_nodes=open_nodes, stats_logs=stats_logs))
+
+    trees = [_assemble_tree(a, 1, m_num, task) for a in accs]
+    if ck is not None:
+        ck.finish_batch(tidx, trees, stats_logs)
+    return trees, stats_logs
 
 
 # ---------------------------------------------------------------------------

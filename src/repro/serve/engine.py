@@ -21,6 +21,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import transformer
 from repro.train import sharding as shd
@@ -29,6 +30,16 @@ from repro.train import sharding as shd
 # ---------------------------------------------------------------------------
 # Forest serving (ROADMAP "Serving export path" follow-up)
 # ---------------------------------------------------------------------------
+
+class InvalidRequest(ValueError):
+    """A malformed predict request (DESIGN.md §9 graceful degradation).
+
+    Raised by `ForestServer.predict` BEFORE the jitted descent for
+    wrong-shape inputs, non-finite numeric rows, or categorical ids
+    outside the declared arity — the cases that would otherwise either
+    crash out of the serving loop or silently route every row down a
+    garbage path.  The server holds no per-request state, so catching
+    this and answering the client with an error leaves it serving."""
 
 @dataclasses.dataclass
 class ForestServer:
@@ -47,10 +58,11 @@ class ForestServer:
 
     packed: object                      # forest.PackedForest
     m_cat: int = 0
+    arities: Optional[tuple] = None     # per categorical column, if known
 
     @classmethod
     def load(cls, path, m_cat: int = 0,
-             warm_batch_sizes=(1,)) -> "ForestServer":
+             warm_batch_sizes=(1,), arities=None) -> "ForestServer":
         """Load an exported forest and pre-compile the descent.
 
         `m_cat` is the categorical input width requests will carry (the
@@ -58,10 +70,20 @@ class ForestServer:
         `warm_batch_sizes` picks which request shapes are traced at
         startup (the descent retraces per batch size — warm every size
         the service will see; 1 covers the single-row latency path).
+        `arities` (optional, len m_cat) enables per-column range checks
+        on categorical ids: an out-of-arity id raises `InvalidRequest`
+        instead of indexing the split mask at a wrong row.
         """
         from repro.core.forest import PackedForest
         packed = PackedForest.load(path)
-        srv = cls(packed=packed, m_cat=int(m_cat))
+        if arities is not None:
+            arities = tuple(int(a) for a in arities)
+            if len(arities) != int(m_cat):
+                raise ValueError(
+                    f"arities has {len(arities)} entries but m_cat="
+                    f"{int(m_cat)} — pass one arity per categorical "
+                    f"column")
+        srv = cls(packed=packed, m_cat=int(m_cat), arities=arities)
         if srv._needs_cat() and srv.m_cat == 0:
             raise ValueError(
                 "this forest splits on categorical features but the "
@@ -75,21 +97,65 @@ class ForestServer:
         return srv
 
     def _needs_cat(self) -> bool:
-        import numpy as np
         return bool(np.asarray(self.packed.is_cat).any())
 
-    def predict(self, num, cat=None):
-        """(B, C) forest-mean distributions; ONE jitted call."""
-        num = jnp.asarray(num, jnp.float32)
+    def _validate(self, num: np.ndarray, cat) -> np.ndarray:
+        """Reject malformed requests with `InvalidRequest` (typed, safe
+        to catch-and-answer) before anything reaches the device."""
+        if num.ndim != 2 or num.shape[1] != self.packed.m_num:
+            raise InvalidRequest(
+                f"numeric input must be (B, {self.packed.m_num}), got "
+                f"shape {tuple(num.shape)}")
+        if num.size and not np.isfinite(num).all():
+            bad = np.argwhere(~np.isfinite(num))[0]
+            raise InvalidRequest(
+                f"numeric input contains a non-finite value at row "
+                f"{int(bad[0])}, column {int(bad[1])} — NaN/inf would "
+                f"route every comparison to the right child silently")
         if cat is None:
             if self.m_cat:
-                raise ValueError(
+                raise InvalidRequest(
                     f"this server was loaded with m_cat={self.m_cat}: "
                     "every request must carry a (B, m_cat) categorical "
                     "array (an empty one would silently route every "
                     "categorical split by category 0)")
-            cat = jnp.zeros((num.shape[0], 0), jnp.int32)
-        return self.packed.predict_proba(num, jnp.asarray(cat, jnp.int32))
+            return np.zeros((num.shape[0], 0), np.int32)
+        cat = np.asarray(cat)
+        if not np.issubdtype(cat.dtype, np.integer):
+            raise InvalidRequest(
+                f"categorical input must be integer ids, got dtype "
+                f"{cat.dtype}")
+        if cat.ndim != 2 or cat.shape[1] != self.m_cat:
+            raise InvalidRequest(
+                f"categorical input must be (B, {self.m_cat}), got "
+                f"shape {tuple(cat.shape)}")
+        if cat.shape != (num.shape[0], self.m_cat):
+            raise InvalidRequest(
+                f"categorical batch {cat.shape[0]} != numeric batch "
+                f"{num.shape[0]}")
+        if cat.size:
+            if cat.min() < 0:
+                raise InvalidRequest("categorical ids must be >= 0")
+            if self.arities is not None:
+                hi = cat.max(axis=0)
+                for j, a in enumerate(self.arities):
+                    if int(hi[j]) >= a:
+                        raise InvalidRequest(
+                            f"categorical column {j} has id "
+                            f"{int(hi[j])} but arity {a} (valid ids "
+                            f"0..{a - 1})")
+        return cat.astype(np.int32, copy=False)
+
+    def predict(self, num, cat=None):
+        """(B, C) forest-mean distributions; ONE jitted call.
+
+        Malformed requests raise `InvalidRequest` before the descent —
+        the caller answers the client and keeps serving (no state to
+        recover; see tests/test_server_robust.py)."""
+        num = np.asarray(num, np.float32)
+        cat = self._validate(num, cat)
+        return self.packed.predict_proba(jnp.asarray(num),
+                                         jnp.asarray(cat, jnp.int32))
 
 
 def prefill_step(params, inputs, cfg, unroll: bool = False):

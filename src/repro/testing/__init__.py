@@ -1,0 +1,5 @@
+"""Test-support utilities shipped with the package (not test code).
+
+`repro.testing.faults` is the fault-injection harness for the
+robustness suite and the checkpointed benchmarks (DESIGN.md §9).
+"""

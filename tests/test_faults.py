@@ -1,0 +1,498 @@
+"""Fault-tolerance suite: kill it, resume it, get the SAME forest.
+
+DESIGN.md §9's contract, asserted three ways:
+
+* retried transient reads never change the trained forest (reads are
+  pure, so a retry is byte-identical — deterministic sweep here plus a
+  hypothesis sweep over random fault schedules);
+* a persistent read failure flushes the held level checkpoint BEFORE
+  `StreamReadError` escapes, and resuming from that checkpoint
+  finishes the forest node-for-node bit-identical to an uninterrupted
+  fit — including mid-forest (completed tree batches are skipped, the
+  in-flight one restarts at its last snapshotted level);
+* SIGKILL — at a scheduled read, after a chosen snapshot, or in the
+  worst window of an atomic write (tmp written, `os.replace` pending)
+  — loses at most the uncommitted levels: the subprocess kill tests
+  (`-m faults`) resume in the parent and assert bit-identity, for
+  in-memory and memmap sources with Sprint pruning on.
+
+Also here: `PackedForest.save` atomicity, `MemmapRowSource` sidecar
+integrity (`CacheIntegrityError`), and checkpoint fingerprint
+validation (`CheckpointMismatchError`).
+"""
+import json
+import logging
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import atomicio, checkpoint, dataset, tree as tree_lib
+from repro.core.dataset import (ArrayRowSource, CacheIntegrityError,
+                                MemmapRowSource, StreamReadError)
+from repro.core.forest import PackedForest, RandomForest
+from repro.data.synthetic import make_tabular
+from repro.testing import faults
+from repro.testing.faults import FaultyRowSource
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+FIELDS = ("feature", "children", "threshold", "is_cat", "cat_mask",
+          "value", "n_node", "gain", "depth")
+
+
+def _assert_forests_identical(fa, fb, ctx=""):
+    assert len(fa.trees) == len(fb.trees), ctx
+    for t, (ta, tb) in enumerate(zip(fa.trees, fb.trees)):
+        assert ta.num_nodes == tb.num_nodes, f"{ctx}/tree{t}: node count"
+        for f in FIELDS:
+            np.testing.assert_array_equal(getattr(ta, f), getattr(tb, f),
+                                          err_msg=f"{ctx}/tree{t}: {f}")
+    # node-identity implies prediction-identity; check the packed path too
+    pa, pb = fa._packed_forest(), fb._packed_forest()
+    x = np.linspace(-2, 2, 32 * pa.m_num).reshape(32, pa.m_num)
+    np.testing.assert_array_equal(
+        np.asarray(pa.predict_proba(x, np.zeros((32, 0), np.int32))),
+        np.asarray(pb.predict_proba(x, np.zeros((32, 0), np.int32))),
+        err_msg=f"{ctx}: packed predict")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    """Streamed reference fit (pruning ON) + its source and params."""
+    ds = make_tabular("xor", n=600, num_informative=4, num_useless=2,
+                      seed=3)
+    params = tree_lib.TreeParams(max_depth=5, split_mode="hist",
+                                 num_bins=16, prune_closed_frac=0.3)
+    src = ArrayRowSource.from_dataset(ds, params.num_bins, chunk_size=149)
+    ref = RandomForest(params=params, num_trees=3, seed=7).fit_streamed(src)
+    return ds, params, src, ref
+
+
+@pytest.fixture(autouse=True)
+def _disarm_hooks():
+    yield
+    faults.disarm()
+
+
+# ---------------------------------------------------------------------------
+# Checkpointed fit: parity, cadence, manifest lifecycle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("every", [1, 2])
+def test_checkpointed_fit_parity_and_cadence(setup, tmp_path, every):
+    """An uninterrupted checkpointed fit trains the identical forest,
+    snapshots on the `checkpoint_every` cadence, and commits the batch
+    (manifest entry + trees file, snapshot dropped)."""
+    _, params, src, ref = setup
+    depths = []
+    checkpoint.POST_SNAPSHOT_HOOK[0] = lambda depth, path: depths.append(depth)
+    ck = tmp_path / f"ck{every}"
+    fc = RandomForest(params=params, num_trees=3, seed=7).fit_streamed(
+        src, checkpoint_dir=str(ck), checkpoint_every=every)
+    _assert_forests_identical(ref, fc, f"every{every}")
+    assert depths, "no snapshots were written"
+    assert all((d + 1) % every == 0 for d in depths), depths
+    with open(ck / "manifest.json") as f:
+        manifest = json.load(f)
+    assert manifest["batches"]["0-2"]["tree_indices"] == [0, 1, 2]
+    assert (ck / "trees_0-2.npz").exists()
+    assert not (ck / "snap_0-2.npz").exists()    # dropped on commit
+    assert not list(ck.glob("*.tmp.*"))          # no atomic-write litter
+
+
+def test_resume_of_completed_fit_is_a_no_op_reload(setup, tmp_path):
+    """resume=True over a fully committed checkpoint dir reloads the
+    trees without touching the source (zero reads)."""
+    _, params, src, ref = setup
+    ck = str(tmp_path / "ck")
+    RandomForest(params=params, num_trees=3, seed=7).fit_streamed(
+        src, checkpoint_dir=ck)
+    counter = FaultyRowSource(src)               # no faults: counts reads
+    fr = RandomForest(params=params, num_trees=3, seed=7).fit_streamed(
+        counter, checkpoint_dir=ck, resume=True)
+    assert counter.reads == 0
+    _assert_forests_identical(ref, fr, "reload")
+
+
+# ---------------------------------------------------------------------------
+# Retry: transient faults are invisible, persistent ones escalate
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("schedule", [
+    {0: 1},                      # first read hiccups once
+    {0: 3, 1: 3, 2: 3},          # every early read at the retry limit
+    {7: 2, 13: 1, 19: 3},        # scattered mid-fit
+])
+def test_transient_faults_never_change_forest(setup, schedule, caplog):
+    _, params, src, ref = setup
+    flaky = FaultyRowSource(src, transient=dict(schedule))
+    with caplog.at_level(logging.WARNING, logger="repro.core.stream"):
+        ff = RandomForest(params=params, num_trees=3, seed=7).fit_streamed(
+            flaky)
+    _assert_forests_identical(ref, ff, f"transient{schedule}")
+    expected_failures = sum(schedule.values())
+    assert flaky.attempts == flaky.reads + expected_failures
+    warnings = [r for r in caplog.records
+                if "transient stream read failure" in r.message]
+    assert len(warnings) == expected_failures
+
+
+def test_persistent_fault_flushes_checkpoint_then_escalates(setup, tmp_path):
+    """A read that fails every retry raises StreamReadError — but only
+    AFTER the last completed level's snapshot hit the disk, so the
+    resume replays just the interrupted level and lands bit-identical."""
+    _, params, src, ref = setup
+    ck = str(tmp_path / "ck")
+    dead = FaultyRowSource(src, persistent={17})
+    with pytest.raises(StreamReadError, match="after 4 attempts"):
+        RandomForest(params=params, num_trees=3, seed=7).fit_streamed(
+            dead, checkpoint_dir=ck, checkpoint_every=3)
+    # checkpoint_every=3 means the level snapshot would normally still be
+    # pending — the escalation path must have flushed it
+    assert os.path.exists(os.path.join(ck, "snap_0-2.npz"))
+    fr = RandomForest(params=params, num_trees=3, seed=7).fit_streamed(
+        src, checkpoint_dir=ck, resume=True)
+    _assert_forests_identical(ref, fr, "resume-after-dead-read")
+
+
+def test_resume_skips_completed_tree_batches(tmp_path):
+    """Mid-forest granularity: a crash in the second tree batch leaves
+    the first committed; the resume retrains ONLY the second."""
+    ds = make_tabular("xor", n=400, num_informative=3, num_useless=1,
+                      seed=11)
+    params = tree_lib.TreeParams(max_depth=4, split_mode="hist",
+                                 num_bins=16)
+    src = ArrayRowSource.from_dataset(ds, params.num_bins, chunk_size=101)
+    ref = RandomForest(params=params, num_trees=4, seed=5,
+                       tree_batch=2).fit_streamed(src)
+    # reads one clean 2-tree batch takes, to aim the fault at batch 2
+    probe = FaultyRowSource(src)
+    RandomForest(params=params, num_trees=2, seed=5,
+                 tree_batch=2).fit_streamed(probe)
+    per_batch = probe.reads
+    ck = str(tmp_path / "ck")
+    # land the fault in batch 2 AFTER its first level completed, so the
+    # resume provably restarts from the snapshot (fewer reads than a
+    # full batch) instead of from scratch
+    chunks_per_level = -(-400 // 101)
+    dead = FaultyRowSource(src, persistent={per_batch + chunks_per_level + 1})
+    with pytest.raises(StreamReadError):
+        RandomForest(params=params, num_trees=4, seed=5,
+                     tree_batch=2).fit_streamed(dead, checkpoint_dir=ck)
+    with open(os.path.join(ck, "manifest.json")) as f:
+        batches = json.load(f)["batches"]
+    assert "0-1" in batches and "2-3" not in batches
+    counter = FaultyRowSource(src)
+    fr = RandomForest(params=params, num_trees=4, seed=5,
+                      tree_batch=2).fit_streamed(counter, checkpoint_dir=ck,
+                                                 resume=True)
+    assert 0 < counter.reads < per_batch     # batch 1 skipped, 2 partial
+    _assert_forests_identical(ref, fr, "mid-forest-resume")
+
+
+# ---------------------------------------------------------------------------
+# Fingerprints: resuming against the wrong state is a typed error
+# ---------------------------------------------------------------------------
+
+def test_resume_fingerprint_mismatch(setup, tmp_path):
+    ds, params, src, _ = setup
+    ck = str(tmp_path / "ck")
+    RandomForest(params=params, num_trees=3, seed=7).fit_streamed(
+        src, checkpoint_dir=ck)
+    # wrong seed
+    with pytest.raises(checkpoint.CheckpointMismatchError, match="seed"):
+        RandomForest(params=params, num_trees=3, seed=8).fit_streamed(
+            src, checkpoint_dir=ck, resume=True)
+    # wrong params
+    deeper = tree_lib.TreeParams(max_depth=7, split_mode="hist",
+                                 num_bins=16, prune_closed_frac=0.3)
+    with pytest.raises(checkpoint.CheckpointMismatchError, match="params"):
+        RandomForest(params=deeper, num_trees=3, seed=7).fit_streamed(
+            src, checkpoint_dir=ck, resume=True)
+    # wrong source (different data -> different edges hash)
+    other = make_tabular("xor", n=600, num_informative=4, num_useless=2,
+                         seed=4)
+    osrc = ArrayRowSource.from_dataset(other, params.num_bins,
+                                       chunk_size=149)
+    with pytest.raises(checkpoint.CheckpointMismatchError, match="source"):
+        RandomForest(params=params, num_trees=3, seed=7).fit_streamed(
+            osrc, checkpoint_dir=ck, resume=True)
+    # resume=False discards the old state instead of raising
+    f2 = RandomForest(params=params, num_trees=3, seed=8).fit_streamed(
+        src, checkpoint_dir=ck)
+    assert len(f2.trees) == 3
+
+
+def test_resume_true_on_empty_dir_trains_fresh(setup, tmp_path):
+    """Crash-loop supervisors pass resume=True unconditionally; the
+    first run (nothing on disk yet) must simply train."""
+    _, params, src, ref = setup
+    fr = RandomForest(params=params, num_trees=3, seed=7).fit_streamed(
+        src, checkpoint_dir=str(tmp_path / "fresh"), resume=True)
+    _assert_forests_identical(ref, fr, "fresh-resume")
+
+
+# ---------------------------------------------------------------------------
+# Atomic writes: the replace window cannot corrupt anything
+# ---------------------------------------------------------------------------
+
+def test_atomic_replace_failure_preserves_target(tmp_path):
+    path = str(tmp_path / "f.txt")
+    atomicio.atomic_replace(path, lambda t: open(t, "w").write("v1"))
+    assert open(path).read() == "v1"
+
+    def exploding_hook(final, tmp):
+        raise RuntimeError("crash in the replace window")
+    atomicio.PRE_REPLACE_HOOK[0] = exploding_hook
+    with pytest.raises(RuntimeError, match="replace window"):
+        atomicio.atomic_replace(path, lambda t: open(t, "w").write("v2"))
+    assert open(path).read() == "v1"            # old file intact
+    assert os.listdir(tmp_path) == ["f.txt"]    # tmp cleaned up
+
+
+def test_packed_forest_save_is_atomic(setup, tmp_path):
+    """A failure between the tmp write and the replace leaves the
+    previous complete model loadable (no truncated .npz)."""
+    ds, params, _, ref = setup
+    path = str(tmp_path / "model.npz")
+    ref._packed_forest().save(path)
+    before = PackedForest.load(path)
+
+    other = RandomForest(params=params, num_trees=2, seed=1).fit(ds)
+    atomicio.PRE_REPLACE_HOOK[0] = lambda final, tmp: (_ for _ in ()).throw(
+        OSError("killed mid-save"))
+    with pytest.raises(OSError, match="mid-save"):
+        other._packed_forest().save(path)
+    faults.disarm()
+    after = PackedForest.load(path)             # still the OLD model
+    assert after.num_trees == before.num_trees == 3
+    np.testing.assert_array_equal(np.asarray(after.feature),
+                                  np.asarray(before.feature))
+
+
+# ---------------------------------------------------------------------------
+# Memmap cache integrity (sidecar metadata)
+# ---------------------------------------------------------------------------
+
+def _build_memmap(tmp_path, n=200, m=3, num_bins=16):
+    rng = np.random.default_rng(0)
+    num = rng.normal(size=(n, m)).astype(np.float32)
+    y = (num[:, 0] > 0).astype(np.int32)
+    path = str(tmp_path / "bins.npy")
+    src = MemmapRowSource.from_numpy(num, y, num_bins=num_bins, path=path)
+    return src, path, num, y
+
+
+def test_memmap_build_writes_sidecar_and_opens_clean(tmp_path):
+    src, path, _, _ = _build_memmap(tmp_path)
+    with open(MemmapRowSource.meta_path(path)) as f:
+        meta = json.load(f)
+    assert meta["n"] == 200 and meta["m_num"] == 3
+    assert meta["num_bins"] == 16 and meta["dtype"] == "uint8"
+    assert src.bins_block(0, 7).shape == (3, 7)  # verification passes
+
+
+def test_memmap_truncated_cache_raises(tmp_path):
+    src, path, num, y = _build_memmap(tmp_path)
+    with open(path, "r+b") as f:
+        f.truncate(os.path.getsize(path) - 64)
+    fresh = MemmapRowSource(path, src.edges, y, num_classes=2)
+    with pytest.raises(CacheIntegrityError):
+        fresh.bins_block(0, 7)
+
+
+def test_memmap_sidecar_mismatch_raises(tmp_path):
+    src, path, num, y = _build_memmap(tmp_path)
+    mp = MemmapRowSource.meta_path(path)
+    for field, value in (("n", 999), ("edges_sha256", "0" * 64),
+                         ("dtype", "uint16")):
+        with open(mp) as f:
+            meta = json.load(f)
+        meta[field] = value
+        with open(mp, "w") as f:
+            json.dump(meta, f)
+        fresh = MemmapRowSource(path, src.edges, y, num_classes=2)
+        with pytest.raises(CacheIntegrityError, match="sidecar"):
+            fresh.bins_block(0, 7)
+        # restore for the next field
+        meta[field] = fresh._expected_meta()[field]
+        with open(mp, "w") as f:
+            json.dump(meta, f)
+
+
+def test_memmap_legacy_cache_without_sidecar_still_opens(tmp_path, caplog):
+    src, path, num, y = _build_memmap(tmp_path)
+    os.unlink(MemmapRowSource.meta_path(path))
+    fresh = MemmapRowSource(path, src.edges, y, num_classes=2)
+    with caplog.at_level(logging.WARNING, logger="repro.core.stream"):
+        blk = fresh.bins_block(0, 7)
+    assert blk.shape == (3, 7)
+    assert any("no sidecar" in r.message for r in caplog.records)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis: random fault schedules never change the forest
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @pytest.mark.hypothesis
+    @settings(max_examples=12, deadline=None)
+    @given(st.dictionaries(st.integers(0, 40), st.integers(1, 3),
+                           max_size=6))
+    def test_property_transient_schedules_are_invisible(schedule):
+        ds = make_tabular("xor", n=96, num_informative=3, num_useless=1,
+                          seed=5)
+        params = tree_lib.TreeParams(max_depth=3, split_mode="hist",
+                                     num_bins=8)
+        src = ArrayRowSource.from_dataset(ds, params.num_bins,
+                                          chunk_size=17)
+        ref = RandomForest(params=params, num_trees=1, seed=2).fit_streamed(
+            src)
+        flaky = FaultyRowSource(src, transient=schedule)
+        got = RandomForest(params=params, num_trees=1, seed=2).fit_streamed(
+            flaky)
+        _assert_forests_identical(ref, got, f"prop{schedule}")
+
+
+# ---------------------------------------------------------------------------
+# SIGKILL -> resume -> parity (subprocess; `-m faults`)
+# ---------------------------------------------------------------------------
+
+_SUB_SETUP = """
+    import numpy as np
+    from repro.core import tree as tree_lib
+    from repro.core.dataset import ArrayRowSource, MemmapRowSource
+    from repro.core.forest import RandomForest
+    from repro.data.synthetic import make_tabular
+    from repro.testing import faults
+    from repro.testing.faults import FaultyRowSource
+
+    ds = make_tabular('xor', n=600, num_informative=4, num_useless=2,
+                      seed=3)
+    params = tree_lib.TreeParams(max_depth=5, split_mode='hist',
+                                 num_bins=16, prune_closed_frac=0.3)
+"""
+
+
+def _run_expect_sigkill(code: str) -> None:
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == -signal.SIGKILL, (
+        f"expected SIGKILL, got rc={out.returncode}\n{out.stderr[-3000:]}")
+
+
+def _memmap_source(setup, tmp_path):
+    ds, params, _, _ = setup
+    return MemmapRowSource.from_numpy(
+        np.asarray(ds.num), np.asarray(ds.labels),
+        num_bins=params.num_bins, path=str(tmp_path / "bins.npy"),
+        chunk_size=149, num_classes=ds.num_classes)
+
+
+@pytest.mark.faults
+@pytest.mark.parametrize("backend", ["array", "memmap"])
+def test_sigkill_mid_fit_resume_is_bit_identical(setup, tmp_path, backend):
+    """Kill the training process outright (SIGKILL at a scheduled chunk
+    read — no cleanup runs), resume from the checkpoint dir in THIS
+    process, and get the reference forest node for node."""
+    _, params, src, ref = setup
+    ck = str(tmp_path / "ck")
+    cache = str(tmp_path / "bins.npy")
+    _run_expect_sigkill(_SUB_SETUP + f"""
+    if {backend!r} == 'array':
+        src = ArrayRowSource.from_dataset(ds, params.num_bins,
+                                          chunk_size=149)
+    else:
+        src = MemmapRowSource.from_numpy(
+            np.asarray(ds.num), np.asarray(ds.labels),
+            num_bins=params.num_bins, path={cache!r},
+            chunk_size=149, num_classes=ds.num_classes)
+    doomed = FaultyRowSource(src, kill_after_reads=14)
+    RandomForest(params=params, num_trees=3, seed=7).fit_streamed(
+        doomed, checkpoint_dir={ck!r})
+    raise SystemExit('unreachable: the kill must fire mid-fit')
+    """)
+    assert os.path.exists(os.path.join(ck, "snap_0-2.npz"))
+    resume_src = (src if backend == "array"
+                  else _memmap_source(setup, tmp_path))
+    fr = RandomForest(params=params, num_trees=3, seed=7).fit_streamed(
+        resume_src, checkpoint_dir=ck, resume=True)
+    _assert_forests_identical(ref, fr, f"sigkill-{backend}")
+
+
+@pytest.mark.faults
+def test_sigkill_mid_checkpoint_replace_keeps_previous_snapshot(
+        setup, tmp_path):
+    """Kill INSIDE the snapshot's atomic-write window (tmp flushed,
+    replace pending): the previous snapshot must survive intact and the
+    resume from it must still be bit-identical."""
+    _, params, src, ref = setup
+    ck = str(tmp_path / "ck")
+    _run_expect_sigkill(_SUB_SETUP + f"""
+    src = ArrayRowSource.from_dataset(ds, params.num_bins, chunk_size=149)
+    faults.arm_kill_mid_replace(nth=2, match='snap_')
+    RandomForest(params=params, num_trees=3, seed=7).fit_streamed(
+        src, checkpoint_dir={ck!r})
+    raise SystemExit('unreachable: the kill must fire mid-write')
+    """)
+    # the first snapshot survived the second one's death mid-replace
+    snap = checkpoint.StreamCheckpointer(ck).load_snapshot([0, 1, 2])
+    assert snap is not None and int(snap["next_depth"]) == 1
+    fr = RandomForest(params=params, num_trees=3, seed=7).fit_streamed(
+        src, checkpoint_dir=ck, resume=True)
+    _assert_forests_identical(ref, fr, "sigkill-mid-replace")
+
+
+@pytest.mark.faults
+def test_sigkill_after_chosen_snapshot_resumes(setup, tmp_path):
+    """Kill-at-level: die right after the 3rd snapshot commits; the
+    resume starts at depth 3 and replays the rest bit-identically."""
+    _, params, src, ref = setup
+    ck = str(tmp_path / "ck")
+    _run_expect_sigkill(_SUB_SETUP + f"""
+    src = ArrayRowSource.from_dataset(ds, params.num_bins, chunk_size=149)
+    faults.arm_kill_after_snapshots(nth=3)
+    RandomForest(params=params, num_trees=3, seed=7).fit_streamed(
+        src, checkpoint_dir={ck!r})
+    raise SystemExit('unreachable: the kill must fire at level 3')
+    """)
+    snap = checkpoint.StreamCheckpointer(ck).load_snapshot([0, 1, 2])
+    assert snap is not None and int(snap["next_depth"]) == 3
+    fr = RandomForest(params=params, num_trees=3, seed=7).fit_streamed(
+        src, checkpoint_dir=ck, resume=True)
+    _assert_forests_identical(ref, fr, "sigkill-at-level")
+
+
+@pytest.mark.faults
+def test_sigkill_mid_model_save_keeps_previous_model(setup, tmp_path):
+    """`PackedForest.save` atomicity under a real SIGKILL: the file on
+    disk after a mid-replace death is the previous COMPLETE model."""
+    _, params, src, ref = setup
+    path = str(tmp_path / "model.npz")
+    ref._packed_forest().save(path)
+    _run_expect_sigkill(_SUB_SETUP + f"""
+    from repro.core.forest import PackedForest
+    other = RandomForest(params=params, num_trees=2, seed=1).fit(ds)
+    faults.arm_kill_mid_replace(match='model.npz')
+    other._packed_forest().save({path!r})
+    raise SystemExit('unreachable: the kill must fire mid-save')
+    """)
+    loaded = PackedForest.load(path)
+    assert loaded.num_trees == 3                 # still the old forest
+    np.testing.assert_array_equal(
+        np.asarray(loaded.feature),
+        np.asarray(ref._packed_forest().feature))

@@ -1,0 +1,123 @@
+"""`ForestServer` graceful degradation (DESIGN.md §9).
+
+Malformed requests — wrong feature count, non-finite numeric rows,
+categorical ids outside the declared arity, wrong dtypes/shapes — must
+raise the typed `InvalidRequest` BEFORE the jitted descent and leave
+the server fully serving: every test fires a bad request, catches the
+error, and asserts the next good request still answers correctly.
+"""
+import numpy as np
+import pytest
+
+from repro.core import tree as tree_lib
+from repro.core.dataset import from_numpy
+from repro.core.forest import RandomForest
+from repro.serve.engine import ForestServer, InvalidRequest
+
+
+@pytest.fixture(scope="module")
+def servers(tmp_path_factory):
+    """A numeric-only server and a mixed numeric+categorical one."""
+    tmp = tmp_path_factory.mktemp("srv")
+    rng = np.random.default_rng(0)
+    n = 400
+    num = rng.normal(size=(n, 3)).astype(np.float32)
+    cat = rng.integers(0, 4, size=(n, 2)).astype(np.int32)
+    y = ((num[:, 0] > 0) ^ (cat[:, 0] == 1)).astype(np.int32)
+    params = tree_lib.TreeParams(max_depth=4)
+
+    ds_num = from_numpy(num, None, y)
+    f_num = RandomForest(params=params, num_trees=3, seed=0).fit(ds_num)
+    p_num = str(tmp / "num.npz")
+    f_num._packed_forest().save(p_num)
+
+    ds_mix = from_numpy(num, cat, y, arities=(4, 4))
+    f_mix = RandomForest(params=params, num_trees=3, seed=0).fit(ds_mix)
+    p_mix = str(tmp / "mix.npz")
+    f_mix._packed_forest().save(p_mix)
+
+    srv_num = ForestServer.load(p_num)
+    srv_mix = ForestServer.load(p_mix, m_cat=2, arities=(4, 4))
+    return srv_num, srv_mix
+
+
+def _good_num():
+    return np.zeros((2, 3), np.float32)
+
+
+def _good_cat():
+    return np.zeros((2, 2), np.int32)
+
+
+def _assert_still_serving(srv, cat=None):
+    """The recovery half of every test: a well-formed request after the
+    rejected one gets a normal answer."""
+    out = np.asarray(srv.predict(_good_num(), cat))
+    assert out.shape == (2, 2)
+    np.testing.assert_allclose(out.sum(-1), 1.0, rtol=1e-5)
+
+
+def test_wrong_feature_count_rejected(servers):
+    srv, _ = servers
+    with pytest.raises(InvalidRequest, match=r"\(B, 3\)"):
+        srv.predict(np.zeros((2, 5), np.float32))
+    with pytest.raises(InvalidRequest, match=r"\(B, 3\)"):
+        srv.predict(np.zeros((3,), np.float32))      # missing batch axis
+    _assert_still_serving(srv)
+
+
+@pytest.mark.parametrize("bad", [np.nan, np.inf, -np.inf])
+def test_non_finite_rows_rejected(servers, bad):
+    srv, _ = servers
+    x = _good_num()
+    x[1, 2] = bad
+    with pytest.raises(InvalidRequest, match="row 1, column 2"):
+        srv.predict(x)
+    _assert_still_serving(srv)
+
+
+def test_categorical_out_of_arity_rejected(servers):
+    _, srv = servers
+    cat = _good_cat()
+    cat[0, 1] = 4                                    # arity 4: ids 0..3
+    with pytest.raises(InvalidRequest, match="column 1 has id 4"):
+        srv.predict(_good_num(), cat)
+    cat = _good_cat()
+    cat[1, 0] = -1
+    with pytest.raises(InvalidRequest, match=">= 0"):
+        srv.predict(_good_num(), cat)
+    _assert_still_serving(srv, _good_cat())
+
+
+def test_categorical_shape_and_dtype_rejected(servers):
+    _, srv = servers
+    with pytest.raises(InvalidRequest, match=r"\(B, 2\)"):
+        srv.predict(_good_num(), np.zeros((2, 3), np.int32))
+    with pytest.raises(InvalidRequest, match="batch"):
+        srv.predict(_good_num(), np.zeros((4, 2), np.int32))
+    with pytest.raises(InvalidRequest, match="integer"):
+        srv.predict(_good_num(), np.zeros((2, 2), np.float32))
+    _assert_still_serving(srv, _good_cat())
+
+
+def test_missing_categorical_row_rejected(servers):
+    _, srv = servers
+    with pytest.raises(InvalidRequest, match="m_cat=2"):
+        srv.predict(_good_num())
+    _assert_still_serving(srv, _good_cat())
+
+
+def test_arities_length_validated_at_load(servers, tmp_path):
+    _, srv = servers
+    # reuse the mixed model file through the server's own packed forest
+    path = str(tmp_path / "again.npz")
+    srv.packed.save(path)
+    with pytest.raises(ValueError, match="one arity per"):
+        ForestServer.load(path, m_cat=2, arities=(4,))
+
+
+def test_invalid_request_is_a_value_error(servers):
+    """Back-compat: callers that caught ValueError keep working."""
+    srv, _ = servers
+    with pytest.raises(ValueError):
+        srv.predict(np.zeros((2, 5), np.float32))

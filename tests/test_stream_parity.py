@@ -336,7 +336,26 @@ def test_sharded_streaming_parity():
             src, engine=eng)
         fl = RandomForest(params=params, num_trees=3, seed=7).fit_streamed(
             src)
-        for a, b in ((ref, fs), (fl, fs)):
+        # fault-tolerance under the mesh engine (DESIGN.md §9): interrupt
+        # a checkpointed sharded streamed fit with a persistent read
+        # fault, resume from the snapshot, and land bit-identical
+        import tempfile
+        from repro.core.dataset import StreamReadError
+        from repro.testing.faults import FaultyRowSource
+        with tempfile.TemporaryDirectory() as ckdir:
+            dead = FaultyRowSource(src, persistent={9})
+            try:
+                RandomForest(params=params, num_trees=3,
+                             seed=7).fit_streamed(dead, engine=eng,
+                                                  checkpoint_dir=ckdir)
+                raise SystemExit('expected StreamReadError')
+            except StreamReadError:
+                pass
+            fr = RandomForest(params=params, num_trees=3,
+                              seed=7).fit_streamed(src, engine=eng,
+                                                   checkpoint_dir=ckdir,
+                                                   resume=True)
+        for a, b in ((ref, fs), (fl, fs), (fr, fs)):
             for ta, tb in zip(a.trees, b.trees):
                 assert ta.num_nodes == tb.num_nodes
                 for f in ('feature', 'children', 'threshold', 'value',
